@@ -1,0 +1,272 @@
+"""One benchmark per paper table/figure (Zhao & Canny 2013).
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+Network times are produced by the calibrated alpha-beta-floor model
+(core.netmodel: EC2-2013 / TPU fabrics); merge/compute times are measured
+on this host.  See EXPERIMENTS.md for the mapping to the paper's numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.netmodel import EC2_2013, TPU_ICI
+from repro.core.simulator import SimSparseAllreduce
+from repro.core.sparse_vec import HashPerm
+from repro.core.topology import ButterflyPlan, binary_plan, roundrobin_plan, tune
+from repro.data.pipeline import powerlaw_graph, random_edge_partition
+from repro.graph.pagerank import (build_partitions, pagerank,
+                                  pagerank_dense_reference)
+
+Row = Tuple[str, float, str]
+
+# Paper-scale workload constants (Twitter followers' graph, Table I)
+TW_N0, TW_RANGE = 12.1e6, 60e6
+YH_N0, YH_RANGE = 48e6, 1.6e9
+
+
+def _timeit(fn, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+# Fig 3: round-robin scaling — per-node time vs cluster size
+# ---------------------------------------------------------------------------
+
+def bench_fig3_roundrobin_scaling() -> List[Row]:
+    rows = []
+    total_bytes = TW_N0 * 64 * 8     # dataset bytes (whole cluster)
+    for m in (8, 16, 32, 64, 128, 256):
+        pkt = total_bytes / m / m    # C/M^2 per message
+        plan = roundrobin_plan(m)
+        t = plan.modeled_time(total_bytes / m / 8, TW_RANGE)
+        rows.append((f"fig3/roundrobin_M{m}", t * 1e6,
+                     f"packet_MB={pkt/1e6:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table I: sparsity of partitioned datasets
+# ---------------------------------------------------------------------------
+
+def bench_table1_sparsity() -> List[Row]:
+    rows = []
+    n, e = 60_000, 1_500_000          # 1/1000-scale twitter
+    edges = powerlaw_graph(n, e, alpha=2.0, seed=0)
+    t0 = time.perf_counter()
+    parts = random_edge_partition(edges, 64, seed=0)
+    dt = (time.perf_counter() - t0) * 1e6
+    fracs = [len(np.unique(p)) / n for p in parts]
+    rows.append(("table1/twitter_scale_partition64", dt,
+                 f"vertex_frac={np.mean(fracs):.3f} (paper: 0.21)"))
+    n2, e2 = 160_000, 600_000        # 1/10000-scale yahoo (sparser)
+    edges2 = powerlaw_graph(n2, e2, alpha=2.2, seed=1)
+    parts2 = random_edge_partition(edges2, 64, seed=1)
+    fracs2 = [len(np.unique(p)) / n2 for p in parts2]
+    rows.append(("table1/yahoo_scale_partition64", dt,
+                 f"vertex_frac={np.mean(fracs2):.3f} (paper: 0.03)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 5: packet size per butterfly layer
+# ---------------------------------------------------------------------------
+
+def bench_fig5_packet_sizes() -> List[Row]:
+    rows = []
+    for degs in [(64,), (16, 4), (8, 8), (4, 4, 4), (2,) * 6]:
+        plan = ButterflyPlan(64, degs)
+        pkts = plan.packet_bytes(TW_N0, TW_RANGE, bytes_per_entry=8.0)
+        rows.append((f"fig5/packets_{plan}", 0.0,
+                     "layers_MB=" + "|".join(f"{p/1e6:.1f}" for p in pkts)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: topology sweep — reduce time + throughput, twitter & yahoo
+# ---------------------------------------------------------------------------
+
+def bench_fig6_topology_sweep() -> List[Row]:
+    rows = []
+    for tag, n0, rng_ in [("twitter", TW_N0, TW_RANGE),
+                          ("yahoo", YH_N0, YH_RANGE)]:
+        scored = []
+        for degs in [(64,), (32, 2), (16, 4), (8, 8), (4, 4, 4), (16, 2, 2),
+                     (2,) * 6]:
+            plan = ButterflyPlan(64, degs)
+            t = plan.modeled_time(n0, rng_, bytes_per_entry=4.0)
+            scored.append((t, plan))
+            tput = n0 * 64 / t / 1e9
+            rows.append((f"fig6/{tag}_{plan}", t * 1e6,
+                         f"throughput_Gvals={tput:.2f}"))
+        best = min(scored)[1]
+        rows.append((f"fig6/{tag}_best", min(scored)[0] * 1e6,
+                     f"best={best} (paper: 16x4)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: thread sweep -> TPU adaptation: NIC serialization vs overlap
+# ---------------------------------------------------------------------------
+
+def bench_fig7_overlap() -> List[Row]:
+    """The paper's thread count tunes how well socket sends overlap; the
+    TPU analogue is per-link concurrency (serial NIC vs parallel ICI)."""
+    rows = []
+    plan = ButterflyPlan(64, (16, 4))
+    for tag, serial, fabric in [("1thread_serialNIC", True, EC2_2013),
+                                ("8threads_overlapNIC", False, EC2_2013),
+                                ("tpu_ici_parallel_links", False, TPU_ICI)]:
+        t = plan.modeled_time(TW_N0, TW_RANGE, fabric=fabric,
+                              serial_nic=serial)
+        rows.append((f"fig7/{tag}", t * 1e6, f"plan={plan}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table II: cost of fault tolerance (replication)
+# ---------------------------------------------------------------------------
+
+def bench_table2_fault_tolerance() -> List[Row]:
+    rows = []
+    rng = np.random.RandomState(0)
+    m = 32
+    scale = 2000  # per-node nnz (downscaled 64-node workload)
+    out_i = [(rng.zipf(1.4, scale) % 200_000).astype(np.uint32)
+             for _ in range(m)]
+    out_v = [rng.randn(scale) for _ in range(m)]
+    in_i = [rng.choice(200_000, scale // 2, replace=False).astype(np.uint32)
+            for _ in range(m)]
+    cases = [("16x4_r0", (16, 2), 1, set()),
+             ("8x4_r0", (8, 4), 1, set()),
+             ("8x4_r1_dead0", (8, 4), 2, set()),
+             ("8x4_r1_dead1", (8, 4), 2, {5}),
+             ("8x4_r1_dead2", (8, 4), 2, {5, 40}),
+             ("8x4_r1_dead3", (8, 4), 2, {5, 40, 17})]
+    for tag, degs, r, dead in cases:
+        sim = SimSparseAllreduce(ButterflyPlan(m, degs), replication=r,
+                                 dead=dead, perm=HashPerm.make(0))
+        t0 = time.perf_counter()
+        cstats = sim.config(out_i, in_i)
+        wall_config = (time.perf_counter() - t0) * 1e6
+        sim.reduce(out_v)
+        rows.append((f"table2/{tag}", wall_config,
+                     f"config_s={cstats.config_time_s:.3f},"
+                     f"reduce_s={sim.reduce_stats.reduce_time_s:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 8: scaling + compute/comm breakdown (PageRank, 10 iters)
+# ---------------------------------------------------------------------------
+
+def bench_fig8_scaling() -> List[Row]:
+    rows = []
+    n, e = 30_000, 600_000
+    edges = powerlaw_graph(n, e, alpha=2.0, seed=0)
+    for m in (4, 16, 64):
+        degs = tune(m, n0=e / m, total_range=n).degrees
+        t0 = time.perf_counter()
+        scores, stats = pagerank(edges, n, m=m, degrees=degs, iters=10)
+        wall = (time.perf_counter() - t0) * 1e6
+        comm = stats["reduce_time_s"]
+        rows.append((f"fig8/pagerank_M{m}", wall,
+                     f"modeled_comm_s={comm:.3f},plan={'x'.join(map(str,degs))}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 9: PageRank system comparison — sparse vs dense allreduce baselines
+# ---------------------------------------------------------------------------
+
+def bench_fig9_pagerank_comparison() -> List[Row]:
+    """Paper compares against Hadoop/GraphX/PowerGraph.  Offline analogue:
+    the same PageRank with (a) our Sparse Allreduce, (b) a dense allreduce
+    (every node ships the full vertex vector — what a generic framework
+    does), (c) round-robin sparse.  Modeled EC2 comm time, 10 iterations."""
+    rows = []
+    n, e, m = 60_000, 1_200_000, 64
+    edges = powerlaw_graph(n, e, alpha=2.0, seed=0)
+    parts = build_partitions(edges, n, m)
+    avg_nnz = np.mean([len(p.out_idx) for p in parts])
+    for tag, degs in [("sparse_hybrid", tune(m, avg_nnz, n).degrees),
+                      ("sparse_roundrobin", (m,)),
+                      ("sparse_binary", (2,) * 6)]:
+        plan = ButterflyPlan(m, degs)
+        t = plan.modeled_time(avg_nnz, n, bytes_per_entry=4.0) * 10
+        rows.append((f"fig9/{tag}", t * 1e6, f"plan={plan}"))
+    # dense baseline: full vector both ways through a ring
+    dense_bytes = n * 4.0
+    t_dense = (2 * dense_bytes * (m - 1) / m / EC2_2013.beta_bytes_per_s
+               + 2 * (m - 1) * EC2_2013.alpha_s) * 10
+    rows.append(("fig9/dense_allreduce_ring", t_dense * 1e6,
+                 "full-vector baseline"))
+    # correctness anchor: our sparse == dense reference
+    ref = pagerank_dense_reference(edges, n, iters=3)
+    got, _ = pagerank(edges, n, m=8, iters=3)
+    err = float(np.max(np.abs(ref - got)))
+    rows.append(("fig9/correctness_max_err", 0.0, f"{err:.2e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# beyond paper: kernel microbenches + grad-sync crossover
+# ---------------------------------------------------------------------------
+
+def bench_kernels() -> List[Row]:
+    import jax.numpy as jnp
+    from repro.core.sparse_vec import SparseChunk
+    from repro.core import sparse_vec as sv
+    from repro.kernels import ops
+    rows = []
+    rng = np.random.RandomState(0)
+    idx = np.sort(rng.randint(0, 100_000, 4096).astype(np.uint32))
+    val = rng.randn(4096, 8).astype(np.float32)
+    ch = SparseChunk(idx=jnp.asarray(idx), val=jnp.asarray(val))
+    f_ref = lambda: sv.segment_compact(ch, 4096).idx.block_until_ready()
+    f_ker = lambda: ops.segment_compact(ch, 4096).idx.block_until_ready()
+    f_ref(); f_ker()  # compile
+    rows.append(("kernels/segment_compact_jnp", _timeit(f_ref), "oracle"))
+    rows.append(("kernels/segment_compact_pallas_interp", _timeit(f_ker),
+                 "interpret=True (correctness mode; perf is TPU-only)"))
+    return rows
+
+
+def bench_grad_sync_crossover() -> List[Row]:
+    """Sparse vs dense embedding-grad sync bytes vs batch size (the paper's
+    mini-batch sparsity argument, on gemma3's 262k vocab)."""
+    rows = []
+    vocab, d, dp = 262_144, 3840, 16
+    dense_bytes = vocab * d * 4 * 2 * (dp - 1) / dp     # ring allreduce
+    for tokens in (512, 2048, 8192, 32768, 131072):
+        # expected unique rows per device then union across dp
+        uniq_dev = vocab / 16 * (1 - (1 - 1 / (vocab / 16)) ** (tokens / 16))
+        union = vocab / 16 * (1 - (1 - 1 / (vocab / 16)) ** (tokens * dp / 16))
+        sparse_bytes = (uniq_dev * (4 + d * 4)          # down (idx+val)
+                        + union * d * 4)                 # up (allgather union)
+        rows.append((f"gradsync/tokens{tokens}", 0.0,
+                     f"sparse_MB={sparse_bytes/1e6:.1f},"
+                     f"dense_MB={dense_bytes/1e6:.1f},"
+                     f"win={dense_bytes/max(sparse_bytes,1):.1f}x"))
+    return rows
+
+
+ALL_BENCHES = [
+    bench_fig3_roundrobin_scaling,
+    bench_table1_sparsity,
+    bench_fig5_packet_sizes,
+    bench_fig6_topology_sweep,
+    bench_fig7_overlap,
+    bench_table2_fault_tolerance,
+    bench_fig8_scaling,
+    bench_fig9_pagerank_comparison,
+    bench_kernels,
+    bench_grad_sync_crossover,
+]

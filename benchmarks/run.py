@@ -1,0 +1,24 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks.paper_benches import ALL_BENCHES
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in ALL_BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{bench.__name__},-1,ERROR:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

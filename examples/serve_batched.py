@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --arch whisper-base
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen1.5-0.5b")
+ap.add_argument("--requests", type=int, default=4)
+ap.add_argument("--gen", type=int, default=12)
+args = ap.parse_args()
+
+serve_main(["--arch", args.arch, "--reduced",
+            "--requests", str(args.requests), "--gen", str(args.gen),
+            "--prompt-len", "24"])

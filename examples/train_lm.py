@@ -1,0 +1,31 @@
+"""End-to-end LM training driver over the framework's public API.
+
+Default: a ~20M-param qwen-family model for 100 steps on CPU (minutes).
+Scale up with --full / --steps; on a TPU mesh the same flags drive the
+production path (the launcher picks the mesh from available devices).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+    PYTHONPATH=src python examples/train_lm.py --sync sparse --untied
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=100)
+ap.add_argument("--sync", default="ring", choices=["ring", "hier", "sparse"])
+ap.add_argument("--untied", action="store_true")
+ap.add_argument("--full", action="store_true",
+                help="full qwen1.5-0.5b config instead of the reduced one")
+ap.add_argument("--arch", default="qwen1.5-0.5b")
+args = ap.parse_args()
+
+argv = ["--arch", args.arch, "--steps", str(args.steps), "--sync", args.sync,
+        "--batch", "8", "--seq", "256", "--ckpt", "results/train_lm_ckpt"]
+if not args.full:
+    argv.append("--reduced")
+if args.untied:
+    argv.append("--untied")
+final_loss = train_main(argv)
+print(f"final loss: {final_loss:.4f}")

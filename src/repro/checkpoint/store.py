@@ -1,0 +1,54 @@
+"""Checkpointing: flat-namespace .npz store with pytree round-trip.
+
+Host-gathered (fine for the CPU/dev path; on a real pod this would stream
+per-shard with a distributed filesystem — the serialization format and
+pytree flattening here are the reusable parts).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any, meta: Dict[str, Any] | None = None) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            vals = [rebuild(v, f"{prefix}#{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        arr = data[prefix[:-1]]
+        want = jax.eval_shape(lambda: tree) if callable(tree) else tree
+        assert arr.shape == tuple(want.shape), \
+            f"{prefix}: {arr.shape} != {want.shape}"
+        return arr
+    return rebuild(like)

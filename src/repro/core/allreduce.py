@@ -1,0 +1,285 @@
+"""TPU-native Sparse Allreduce: nested heterogeneous butterfly over shard_map.
+
+The paper's point-to-point socket schedule maps onto mesh collectives:
+
+  * one butterfly layer of degree k  ==  ``lax.all_to_all`` within
+    ``axis_index_groups`` of size k along the data-parallel mesh axis
+    (down / scatter-reduce), and ``lax.all_gather`` within the same groups
+    in reverse order (up / allgather) — the paper's *nested* pattern;
+  * the hash-permuted sorted-range partition becomes a static-shape
+    ``bucket_partition`` (contiguous slabs of the sorted chunk);
+  * the tree-merge sum becomes sort + segment-compact (MXU-friendly
+    one-hot-matmul kernel in kernels/segment_compact.py).
+
+SPMD needs static shapes, so every stage has a capacity derived from the
+requested output capacity plus a balance slack; overflow is *counted* and
+returned (the same contract as MoE token dropping).  The paper's hash
+permutation is exactly what makes these capacities safe.
+
+Dense baselines (ring / binary butterfly / hierarchical heterogeneous
+butterfly) live here too — they are the paper's §II comparison points and
+the beyond-paper dense gradient path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .sparse_vec import (SENTINEL, SparseChunk, bucket_partition,
+                         concat_sorted_groups, segment_compact, sort_chunk)
+from .topology import ButterflyPlan
+
+
+# ---------------------------------------------------------------------------
+# Device-side plan: stages spanning one or more mesh axes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One butterfly layer bound to a mesh axis."""
+    axis_name: str
+    degree: int
+    axis_index_groups: Tuple[Tuple[int, ...], ...]
+    bucket_capacity: int
+    merged_capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlan:
+    """Butterfly plan bound to mesh axes, with static capacities.
+
+    ``axes``: ordered [(axis_name, axis_size)], most-significant first
+    (e.g. [("pod", 2), ("data", 16)]).  ``degrees_per_axis`` factorizes each
+    axis; the concatenated degree sequence is the logical ButterflyPlan over
+    prod(sizes) nodes.  Edges arrays are host-precomputed per logical node
+    and passed into shard_map sharded over the same axes.
+    """
+
+    axes: Tuple[Tuple[str, int], ...]
+    stages: Tuple[Stage, ...]
+    logical: ButterflyPlan
+    in_capacity: int
+    out_capacity: int
+
+    @property
+    def num_nodes(self) -> int:
+        return self.logical.num_nodes
+
+    def edges_arrays(self) -> List[np.ndarray]:
+        """Per-stage [*axis_sizes, k_l + 1] uint32 range-edge tensors."""
+        out = []
+        shape = tuple(s for _, s in self.axes)
+        for l, st in enumerate(self.stages):
+            e = self.logical.all_edges(l)                       # [M, k+1] int64
+            e = np.minimum(e, (1 << 32) - 1).astype(np.uint32)
+            out.append(e.reshape(shape + (st.degree + 1,)))
+        return out
+
+
+def make_device_plan(axes: Sequence[Tuple[str, int]],
+                     degrees_per_axis: dict,
+                     in_capacity: int,
+                     out_capacity: int,
+                     slack: float = 2.0) -> DevicePlan:
+    """Bind a heterogeneous butterfly to mesh axes with static capacities.
+
+    Capacity schedule: stage l buckets hold ``ceil(m_{l-1}/k * slack)``
+    entries; merged chunks hold ``min(k*c_l, ceil(out_capacity * slack /
+    prod(k_1..k_l)))`` — lossless when the hash permutation balances ranges
+    (paper §III-A) and ``out_capacity`` covers the global union.
+    """
+    degrees: List[int] = []
+    for name, size in axes:
+        d = tuple(degrees_per_axis.get(name, (size,)))
+        if math.prod(d) != size:
+            raise ValueError(f"axis {name}: prod{d} != {size}")
+        degrees.extend(d)
+    m = math.prod(s for _, s in axes)
+    logical = ButterflyPlan(m, tuple(degrees))
+
+    # axis-local groups per stage
+    stages: List[Stage] = []
+    li = 0
+    m_prev = in_capacity
+    prod_k = 1
+    for name, size in axes:
+        sub = ButterflyPlan(size, tuple(degrees_per_axis.get(name, (size,))))
+        for sl in range(sub.depth):
+            k = sub.degrees[sl]
+            groups = tuple(tuple(g) for g in sub.axis_index_groups(sl))
+            cap = _round8(int(math.ceil(m_prev / k * slack)))
+            prod_k *= k
+            merged = min(k * cap,
+                         _round8(int(math.ceil(out_capacity * slack / prod_k))))
+            merged = max(merged, 8)
+            stages.append(Stage(axis_name=name, degree=k,
+                                axis_index_groups=groups,
+                                bucket_capacity=cap, merged_capacity=merged))
+            m_prev = merged
+            li += 1
+    return DevicePlan(axes=tuple(axes), stages=tuple(stages), logical=logical,
+                      in_capacity=in_capacity, out_capacity=out_capacity)
+
+
+def _round8(x: int) -> int:
+    return max(8, ((x + 7) // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# The primitive: fused config-reduce with gather-all (union) semantics.
+# Runs INSIDE shard_map.  (The paper's mini-batch mode: dynamic indices.)
+# ---------------------------------------------------------------------------
+
+def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
+                           edges: Sequence[jax.Array],
+                           use_kernel: bool = False
+                           ) -> Tuple[SparseChunk, jax.Array]:
+    """Nested butterfly sparse allreduce; every node gets the full union sum.
+
+    ``chunk``: this device's sorted SparseChunk (hashed indices).
+    ``edges``: per-stage range-edge arrays, each shaped [1,...,1, k_l+1]
+    after shard_map slicing — i.e. this device's own edges.
+    Returns (union chunk of capacity ``out_capacity`` per device replica,
+    overflow count — entries dropped to capacity anywhere in the network).
+    """
+    overflow = jnp.zeros((), jnp.int32)
+
+    # ---- down: scatter-reduce through the layers --------------------------
+    for l, st in enumerate(plan.stages):
+        e = edges[l].reshape((-1,))[-(st.degree + 1):]
+        buckets, ovf = bucket_partition(chunk, e, st.degree,
+                                        st.bucket_capacity)
+        overflow = overflow + ovf
+        r_idx = lax.all_to_all(buckets.idx, st.axis_name, split_axis=0,
+                               concat_axis=0,
+                               axis_index_groups=list(map(list, st.axis_index_groups)))
+        r_val = lax.all_to_all(buckets.val, st.axis_name, split_axis=0,
+                               concat_axis=0,
+                               axis_index_groups=list(map(list, st.axis_index_groups)))
+        cat = concat_sorted_groups(r_idx, r_val)
+        from .sparse_vec import compact_overflow
+        overflow = overflow + compact_overflow(cat, st.merged_capacity)
+        chunk = segment_compact(cat, st.merged_capacity, use_kernel=use_kernel)
+
+    # ---- up: allgather back through the same nodes (nested) ---------------
+    for st in reversed(plan.stages):
+        g = list(map(list, st.axis_index_groups))
+        idx = lax.all_gather(chunk.idx, st.axis_name, axis_index_groups=g,
+                             axis=0, tiled=True)
+        val = lax.all_gather(chunk.val, st.axis_name, axis_index_groups=g,
+                             axis=0, tiled=True)
+        chunk = SparseChunk(idx=idx, val=val)  # concat of sorted disjoint ranges
+
+    # Trim/pad to the advertised out capacity (sorted already).
+    if chunk.capacity != plan.out_capacity:
+        chunk = _trim_sorted(chunk, plan.out_capacity)
+    return chunk, overflow
+
+
+def _trim_sorted(chunk: SparseChunk, cap: int) -> SparseChunk:
+    """Keep the first ``cap`` *valid* rows of a concat-of-sorted-ranges chunk.
+
+    The concatenation of disjoint sorted ranges is globally sorted except for
+    interleaved sentinel padding; compact valid rows to the front first.
+    """
+    valid = chunk.valid_mask()
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    c = chunk.capacity
+    dest = jnp.where(valid, pos, c)
+    out_idx = jnp.full((max(cap, 1),), SENTINEL, jnp.uint32)
+    out_idx = out_idx.at[dest].set(chunk.idx, mode="drop")
+    vshape = (cap,) + chunk.val.shape[1:]
+    out_val = jnp.zeros(vshape, chunk.val.dtype)
+    mask = valid[(...,) + (None,) * (chunk.val.ndim - 1)]
+    out_val = out_val.at[dest].set(jnp.where(mask, chunk.val, 0), mode="drop")
+    return SparseChunk(idx=out_idx, val=out_val)
+
+
+# ---------------------------------------------------------------------------
+# Dense baselines (paper §II) — run inside shard_map
+# ---------------------------------------------------------------------------
+
+def dense_allreduce_ring(x: jax.Array, axis_name) -> jax.Array:
+    """Stock psum — XLA lowers to (bidirectional) ring; the round-robin
+    analogue and the baseline every framework uses."""
+    return lax.psum(x, axis_name)
+
+
+def dense_allreduce_hierarchical(x: jax.Array, plan: DevicePlan) -> jax.Array:
+    """Heterogeneous-degree hierarchical dense allreduce (beyond-paper dense
+    path): reduce-scatter down the butterfly layers, all-gather back up.
+    Requires x.shape[0] divisible by the total butterfly size."""
+    for st in plan.stages:
+        g = list(map(list, st.axis_index_groups))
+        x = lax.psum_scatter(x, st.axis_name, scatter_dimension=0,
+                             axis_index_groups=g, tiled=True)
+    for st in reversed(plan.stages):
+        g = list(map(list, st.axis_index_groups))
+        x = lax.all_gather(x, st.axis_name, axis_index_groups=g, axis=0,
+                           tiled=True)
+    return x
+
+
+def dense_allreduce_binary(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Degree-2 butterfly (hypercube) allreduce via paired psums."""
+    plan = ButterflyPlan(axis_size, (2,) * int(math.log2(axis_size)))
+    for l in range(plan.depth):
+        g = [list(gr) for gr in plan.axis_index_groups(l)]
+        x = lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                             axis_index_groups=g, tiled=True)
+    for l in reversed(range(plan.depth)):
+        g = [list(gr) for gr in plan.axis_index_groups(l)]
+        x = lax.all_gather(x, axis_name, axis_index_groups=g, axis=0, tiled=True)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Host-side helpers to run the primitive end to end (tests / examples)
+# ---------------------------------------------------------------------------
+
+def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
+                        idx: jax.Array, val: jax.Array,
+                        use_kernel: bool = False):
+    """Convenience wrapper: shard (idx, val) over the plan's axes and run.
+
+    idx: uint32 [M, C] hashed *sorted* indices per node (SENTINEL padded)
+    val: [M, C] or [M, C, W]
+    Returns (idx [M, out_cap], val [M, out_cap(,W)], overflow [M]).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    axis_names = tuple(n for n, _ in plan.axes)
+    shape = tuple(s for _, s in plan.axes)
+    edges = [jnp.asarray(e) for e in plan.edges_arrays()]
+    idx_r = idx.reshape(shape + idx.shape[1:])
+    val_r = val.reshape(shape + val.shape[1:])
+
+    data_specs = P(*axis_names)
+    edge_specs = tuple(P(*axis_names, *([None])) for _ in edges)
+
+    def body(i, v, *e):
+        i = i.reshape(i.shape[len(shape):])
+        v = v.reshape(v.shape[len(shape):])
+        chunk, ovf = sparse_allreduce_union(SparseChunk(idx=i, val=v), plan,
+                                            e, use_kernel=use_kernel)
+        pad = (1,) * len(shape)
+        return (chunk.idx.reshape(pad + chunk.idx.shape),
+                chunk.val.reshape(pad + chunk.val.shape),
+                ovf.reshape(pad))
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(data_specs, data_specs) + edge_specs,
+                   out_specs=(data_specs, data_specs, data_specs),
+                   check_vma=False)
+    oi, ov, ovf = fn(idx_r, val_r, *edges)
+    m = math.prod(shape)
+    return (oi.reshape((m,) + oi.shape[len(shape):]),
+            ov.reshape((m,) + ov.shape[len(shape):]),
+            ovf.reshape((m,)))

@@ -1,0 +1,115 @@
+"""Public Sparse Allreduce API — the paper's two-call interface (§III-B).
+
+    ar = SparseAllreduce(num_nodes=64, degrees=(16, 4))       # or degrees="auto"
+    ar.config(out_indices, in_indices)     # once per index pattern
+    new_vals = ar.reduce(out_values)       # every iteration
+
+Backends:
+  * ``backend="sim"``     — message-level numpy reference (+ timing model,
+    replication, failures).  Default; runs anywhere.
+  * ``backend="device"``  — host config + jitted shard_map reduce on a JAX
+    mesh (the production TPU path; works on any device count incl. forced
+    host devices).
+
+The gather-all (union) device primitive used by the training framework is
+exposed separately in :mod:`repro.core.allreduce`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .netmodel import EC2_2013, Fabric
+from .sparse_vec import HashPerm
+from .simulator import ReduceStats, SimSparseAllreduce
+from .topology import ButterflyPlan, tune
+
+
+class SparseAllreduce:
+    def __init__(self, num_nodes: int, degrees="auto", *,
+                 backend: str = "sim",
+                 replication: int = 1, dead: Optional[Set[int]] = None,
+                 fabric: Fabric = EC2_2013, seed: int = 0,
+                 value_width: int = 1, mesh=None,
+                 expected_nnz: float = 1e5, index_range: float = 1e6):
+        self.num_nodes = num_nodes
+        if degrees == "auto":
+            plan = tune(num_nodes, n0=expected_nnz, total_range=index_range,
+                        fabric=fabric)
+            degrees = plan.degrees
+        self.plan = ButterflyPlan(num_nodes, tuple(degrees))
+        self.backend = backend
+        self.perm = HashPerm.make(seed)
+        self.width = value_width
+        self.fabric = fabric
+        self.replication = replication
+        self.dead = dead
+        self.mesh = mesh
+        self._sim: Optional[SimSparseAllreduce] = None
+        self._planned = None
+        self._reduce_fn = None
+        self._u_cap = None
+        self._in_lens = None
+
+    # ------------------------------------------------------------------
+    def config(self, out_indices: Sequence[np.ndarray],
+               in_indices: Sequence[np.ndarray]) -> ReduceStats:
+        self._in_lens = [len(i) for i in in_indices]
+        self._out_lens = [len(o) for o in out_indices]
+        if self.backend == "sim":
+            self._sim = SimSparseAllreduce(
+                self.plan, replication=self.replication, dead=self.dead,
+                perm=self.perm, fabric=self.fabric, value_width=self.width)
+            return self._sim.config(out_indices, in_indices)
+        elif self.backend == "device":
+            import jax
+            from .allreduce import make_device_plan
+            from .planned import plan_sparse_allreduce
+            if self.replication != 1:
+                raise NotImplementedError(
+                    "device backend: replication via contribution_weights in "
+                    "repro.core.replication; see bench_fault_tolerance")
+            mesh = self.mesh
+            if mesh is None:
+                n = len(jax.devices())
+                if n % self.num_nodes:
+                    raise ValueError(f"{n} devices for {self.num_nodes} nodes")
+                mesh = jax.make_mesh((self.num_nodes,), ("nodes",))
+            axis = mesh.axis_names[0]
+            dplan = make_device_plan(
+                [(axis, self.num_nodes)], {axis: self.plan.degrees},
+                in_capacity=max(self._out_lens),
+                out_capacity=sum(self._out_lens))
+            self._planned = plan_sparse_allreduce(
+                dplan, out_indices, in_indices, perm=self.perm,
+                width=self.width)
+            self._reduce_fn = self._planned.make_reduce_fn(mesh)
+            self._u_cap = self._planned.user_scatter.shape[1]
+            # stats come from a simulator shadow-config (same routing)
+            shadow = SimSparseAllreduce(self.plan, perm=self.perm,
+                                        fabric=self.fabric,
+                                        value_width=self.width)
+            return shadow.config(out_indices, in_indices)
+        raise ValueError(f"unknown backend {self.backend!r}")
+
+    # ------------------------------------------------------------------
+    def reduce(self, out_values: Sequence[np.ndarray]) -> List[np.ndarray]:
+        if self.backend == "sim":
+            return self._sim.reduce(out_values)
+        import jax.numpy as jnp
+        vshape = (self.num_nodes, self._u_cap) + \
+            ((self.width,) if self.width > 1 else ())
+        vals = np.zeros(vshape, np.float32)
+        for n in range(self.num_nodes):
+            vals[n, : len(out_values[n])] = out_values[n]
+        out = np.asarray(self._reduce_fn(jnp.asarray(vals)))
+        return [out[n, : self._in_lens[n]] for n in range(self.num_nodes)]
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Optional[ReduceStats]:
+        if self.backend == "sim" and self._sim is not None:
+            return getattr(self._sim, "reduce_stats", None)
+        return None

@@ -1,0 +1,287 @@
+"""Planned Sparse Allreduce: host-side ``config``, device-side ``reduce``.
+
+This is the paper's property #2 (§I-B): *"Index calculations (configuration)
+can be separated from value calculations and only computed once for problems
+where the indices are fixed (e.g. PageRank iterations)."*
+
+``config`` runs the message-level routing ONCE on host (numpy, via the
+simulator's data structures), then freezes every routing decision into
+static, padded gather/scatter index tensors.  ``reduce`` is then a pure
+static-shape device program — gathers, ``all_to_all`` exchanges, and
+scatter-adds inside shard_map — jitted once and reused every iteration with
+new values.  Indices are never re-communicated (paper §IV-A: "vertex indices
+are already hard-coded in the maps").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .allreduce import DevicePlan
+from .sparse_vec import HashPerm
+from .simulator import SimSparseAllreduce
+from .topology import ButterflyPlan
+
+
+def _pad_gather(rows: List[np.ndarray], width: int) -> np.ndarray:
+    """Stack ragged position rows into [len(rows), width], -1 padded."""
+    out = np.full((len(rows), width), -1, np.int32)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return out
+
+
+@dataclasses.dataclass
+class _LayerMaps:
+    send_gather: np.ndarray    # [M, k, cap]  -> positions in current values
+    merge_scatter: np.ndarray  # [M, k, cap]  -> positions in next values (or m_max)
+    merged_size: int           # m_max (+1 slot used as drop bin)
+    up_send_gather: np.ndarray  # [M, k, upcap] -> positions in my up array
+    up_recv_scatter: np.ndarray  # [M, k, upcap] -> positions in my (layer-l) up array
+    up_size: int
+
+
+@dataclasses.dataclass
+class PlannedSparseAllreduce:
+    """Static-index sparse allreduce bound to a mesh.
+
+    Build with :func:`plan_sparse_allreduce`.  ``reduce_on_device`` is the
+    shard_map body (composable into a larger step function);
+    ``reduce`` is a standalone jitted host entry point.
+    """
+
+    dplan: DevicePlan
+    perm: HashPerm
+    width: int
+    # host-side padded routing tensors (converted lazily to device arrays)
+    user_scatter: np.ndarray        # [M, u_cap] user slot -> sorted slot
+    sorted_size: int
+    layers: List[_LayerMaps]
+    bottom_gather: np.ndarray       # [M, q_cap] positions into bottom values
+    bottom_hit: np.ndarray          # [M, q_cap] bool
+    user_gather: np.ndarray         # [M, uin_cap] sorted-in slot per user slot
+    in_user_len: int
+
+    # ---------------------------------------------------------------------
+    def device_args(self):
+        """Routing tensors as jnp arrays, ordered for reduce_on_device."""
+        args = [jnp.asarray(self.user_scatter)]
+        for L in self.layers:
+            args += [jnp.asarray(L.send_gather), jnp.asarray(L.merge_scatter),
+                     jnp.asarray(L.up_send_gather), jnp.asarray(L.up_recv_scatter)]
+        args += [jnp.asarray(self.bottom_gather), jnp.asarray(self.bottom_hit),
+                 jnp.asarray(self.user_gather)]
+        return args
+
+    def arg_specs(self):
+        from jax.sharding import PartitionSpec as P
+        axes = tuple(n for n, _ in self.dplan.axes)
+        n = len(self.device_args())
+        return tuple(P(axes if len(axes) > 1 else axes[0]) for _ in range(n))
+
+    # ---------------------------------------------------------------------
+    def reduce_on_device(self, values: jax.Array, *routing) -> jax.Array:
+        """shard_map body: values [u_cap(,W)] on this device -> [uin_cap(,W)].
+
+        ``routing`` tensors arrive sharded with a leading per-device dim of
+        size 1 on each plan axis; we squeeze them here.
+        """
+        nax = len(self.dplan.axes)
+
+        def sq(a):
+            return a.reshape(a.shape[nax:])
+
+        it = iter(routing)
+        user_scatter = sq(next(it))
+        W = values.shape[-1] if values.ndim > 1 else None
+
+        def zeros(n):
+            return jnp.zeros((n,) if W is None else (n, W), values.dtype)
+
+        # coalesce user values onto sorted slots (+1 drop bin for padding)
+        cur = zeros(self.sorted_size + 1).at[user_scatter].add(values)[:-1]
+
+        stages = self.dplan.stages
+        up_payload_gathers, up_scatters, up_sizes = [], [], []
+        for l, L in enumerate(self.layers):
+            send_g = sq(next(it))
+            merge_s = sq(next(it))
+            up_g = sq(next(it))
+            up_s = sq(next(it))
+            k, cap = send_g.shape[0], send_g.shape[1]
+            safe = jnp.maximum(send_g, 0)
+            picked = cur[safe] * (send_g >= 0)[(...,) + (None,) * (values.ndim - 1)]
+            g = list(map(list, stages[l].axis_index_groups))
+            recv = lax.all_to_all(picked, stages[l].axis_name, split_axis=0,
+                                  concat_axis=0, axis_index_groups=g)
+            nxt = zeros(L.merged_size + 1)
+            nxt = nxt.at[merge_s.reshape((-1,))].add(
+                recv.reshape((k * cap,) + recv.shape[2:]))
+            cur = nxt[:-1]
+            up_payload_gathers.append(up_g)
+            up_scatters.append(up_s)
+            up_sizes.append(L.up_size)
+
+        bottom_gather = sq(next(it))
+        bottom_hit = sq(next(it))
+        user_gather = sq(next(it))
+
+        up = cur[jnp.maximum(bottom_gather, 0)] \
+            * bottom_hit[(...,) + (None,) * (values.ndim - 1)]
+
+        for l in reversed(range(len(self.layers))):
+            up_g, up_s = up_payload_gathers[l], up_scatters[l]
+            k, cap = up_g.shape[0], up_g.shape[1]
+            safe = jnp.maximum(up_g, 0)
+            picked = up[safe] * (up_g >= 0)[(...,) + (None,) * (values.ndim - 1)]
+            g = list(map(list, self.dplan.stages[l].axis_index_groups))
+            recv = lax.all_to_all(picked, self.dplan.stages[l].axis_name,
+                                  split_axis=0, concat_axis=0,
+                                  axis_index_groups=g)
+            nxt = zeros(up_sizes[l] + 1)
+            nxt = nxt.at[up_s.reshape((-1,))].set(
+                recv.reshape((k * cap,) + recv.shape[2:]), mode="drop")
+            up = nxt[:-1]
+
+        return up[jnp.maximum(user_gather, 0)] \
+            * (user_gather >= 0)[(...,) + (None,) * (values.ndim - 1)]
+
+    # ---------------------------------------------------------------------
+    def make_reduce_fn(self, mesh: jax.sharding.Mesh):
+        """Jitted host entry: values [M, u_cap(,W)] -> [M, uin_cap(,W)]."""
+        from jax.sharding import PartitionSpec as P
+        from jax import shard_map
+        shape = tuple(s for _, s in self.dplan.axes)
+        axes = tuple(n for n, _ in self.dplan.axes)
+        nax = len(shape)
+        spec = P(*axes)
+        routing = self.device_args()
+
+        def body(v, *r):
+            v = v.reshape(v.shape[nax:])
+            out = self.reduce_on_device(v, *r)
+            return out.reshape((1,) * nax + out.shape)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(spec,) + tuple(spec for _ in routing),
+                       out_specs=spec, check_vma=False)
+
+        def run(values: jax.Array) -> jax.Array:
+            v = values.reshape(shape + values.shape[1:])
+            out = fn(v, *routing)
+            m = math.prod(shape)
+            return out.reshape((m,) + out.shape[nax:])
+
+        return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# config: run host routing once, freeze into padded tensors
+# ---------------------------------------------------------------------------
+
+def plan_sparse_allreduce(dplan: DevicePlan,
+                          out_indices: Sequence[np.ndarray],
+                          in_indices: Sequence[np.ndarray],
+                          perm: Optional[HashPerm] = None,
+                          width: int = 1) -> PlannedSparseAllreduce:
+    """The paper's ``config`` call: indices in, frozen routing out."""
+    perm = perm if perm is not None else HashPerm.make(0)
+    sim = SimSparseAllreduce(dplan.logical, perm=perm, value_width=width)
+    sim.config(out_indices, in_indices)
+    plan, m = dplan.logical, dplan.logical.num_nodes
+    didx = sim._down_idx_cache  # per-layer sorted idx arrays
+
+    u_cap = max(len(u) for u in sim.out_user_to_sorted) or 1
+    sorted_size = max(len(s) for s in sim.out_sorted) or 1
+    user_scatter = np.full((m, u_cap), sorted_size, np.int32)  # drop bin
+    for n in range(m):
+        user_scatter[n, : len(sim.out_user_to_sorted[n])] = \
+            sim.out_user_to_sorted[n]
+
+    layers: List[_LayerMaps] = []
+    for l in range(plan.depth):
+        k = plan.degrees[l]
+        # send pieces: node n -> digit t: slice cuts[t]:cuts[t+1] of cur
+        send_rows, merge_rows = [], []
+        cap = 0
+        cuts_all = []
+        for n in range(m):
+            cuts = np.searchsorted(didx[l][n].astype(np.uint64),
+                                   plan.edges_at(n, l).astype(np.uint64))
+            cuts_all.append(cuts)
+            cap = max(cap, int(np.max(cuts[1:] - cuts[:-1])))
+        merged_size = max(len(didx[l + 1][n]) for n in range(m)) or 1
+        send_gather = np.full((m, k, cap), -1, np.int32)
+        merge_scatter = np.full((m, k, cap), merged_size, np.int32)
+        for n in range(m):
+            members = plan.group_members(n, l)
+            t_self = members.index(n)
+            cuts = cuts_all[n]
+            for t in range(k):
+                ln = cuts[t + 1] - cuts[t]
+                send_gather[n, t, :ln] = np.arange(cuts[t], cuts[t + 1])
+            # merge: received piece from member with digit t = that member's
+            # slice at t_self; its position in my merged array = inv map
+            src_slices, inv, uniq = sim.down_maps[l][n]
+            for t in range(k):
+                seg = inv[src_slices[t]:src_slices[t + 1]]
+                merge_scatter[n, t, : len(seg)] = seg
+        # up phase maps
+        upcap = 0
+        for n in range(m):
+            for t in range(k):
+                upcap = max(upcap, len(sim.ret_pos[l][n][t]))
+        upcap = max(upcap, 1)
+        up_size = max(len(sim.in_at[l][n]) for n in range(m)) or 1
+        up_send_gather = np.full((m, k, upcap), -1, np.int32)
+        up_recv_scatter = np.full((m, k, upcap), up_size, np.int32)
+        for n in range(m):
+            members = plan.group_members(n, l)
+            digit_of = {mem: t for t, mem in enumerate(members)}
+            t_self = digit_of[n]
+            # as sender: to peer with digit t, send values for that peer's
+            # request piece, positions in MY layer-(l+1) up array
+            for t, mem in enumerate(members):
+                pos = sim.ret_pos[l][mem][t_self]  # mem requested from me
+                up_send_gather[n, t, : len(pos)] = pos
+            # as receiver: piece from member with digit t lands at my cuts
+            own_idx = sim.in_at[l][n]
+            cuts = np.searchsorted(own_idx.astype(np.uint64),
+                                   plan.edges_at(n, l).astype(np.uint64))
+            for t in range(k):
+                ln = cuts[t + 1] - cuts[t]
+                up_recv_scatter[n, t, :ln] = np.arange(cuts[t], cuts[t + 1])
+        layers.append(_LayerMaps(send_gather=send_gather,
+                                 merge_scatter=merge_scatter,
+                                 merged_size=merged_size,
+                                 up_send_gather=up_send_gather,
+                                 up_recv_scatter=up_recv_scatter,
+                                 up_size=up_size))
+
+    q_cap = max(len(p) for p in sim.bottom_pos) or 1
+    bottom_gather = np.full((m, q_cap), -1, np.int32)
+    bottom_hit = np.zeros((m, q_cap), bool)
+    for n in range(m):
+        bottom_gather[n, : len(sim.bottom_pos[n])] = sim.bottom_pos[n]
+        bottom_hit[n, : len(sim.bottom_hit[n])] = sim.bottom_hit[n]
+
+    uin_cap = max(len(u) for u in sim.in_sorted_to_user) or 1
+    user_gather = np.full((m, uin_cap), -1, np.int32)
+    for n in range(m):
+        user_gather[n, : len(sim.in_sorted_to_user[n])] = \
+            sim.in_sorted_to_user[n]
+
+    # Normalize per-layer pad sizes: values arrays must have one static size
+    # per layer across devices — we already took maxima; per-device shorter
+    # content is padded with drop bins / -1.
+    return PlannedSparseAllreduce(
+        dplan=dplan, perm=perm, width=width,
+        user_scatter=user_scatter, sorted_size=sorted_size, layers=layers,
+        bottom_gather=bottom_gather, bottom_hit=bottom_hit,
+        user_gather=user_gather, in_user_len=uin_cap)

@@ -1,0 +1,75 @@
+"""r-way replication for fault tolerance (paper §V).
+
+Simulator path: fully faithful — replicated messages, first-alive-replica
+selection, DeadLogicalNode when a whole replica group is lost (birthday
+bound ~sqrt(M) random failures for r=2).
+
+Device path: SPMD collectives are deterministic, so *packet racing* (§V-B)
+has no TPU analogue (documented in DESIGN.md §8).  What transfers is the
+redundancy schedule: the physical data axis of size M_phys hosts
+M_phys / r logical shards, each replicated r times; exactly one alive
+replica per logical shard contributes its chunk (weight 1), the rest
+contribute zeros.  Every device still receives the full union, so any
+replica can stand in for a dead one — same completion guarantee as the
+paper, costed in benchmarks/bench_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Set
+
+import numpy as np
+
+from .topology import ButterflyPlan
+
+
+def replica_groups(m_physical: int, replication: int):
+    """Logical shard i lives on physical nodes i, i+M, ..., i+(r-1)M."""
+    if m_physical % replication:
+        raise ValueError(f"{m_physical} devices not divisible by r={replication}")
+    m_logical = m_physical // replication
+    return [[i + j * m_logical for j in range(replication)]
+            for i in range(m_logical)]
+
+
+def contribution_weights(m_physical: int, replication: int,
+                         dead: Optional[Set[int]] = None) -> np.ndarray:
+    """weight[d] = 1.0 iff d is the first alive replica of its logical shard.
+
+    Raises if a whole replica group is dead (protocol cannot complete —
+    paper §V-A).
+    """
+    dead = set(dead or ())
+    w = np.zeros(m_physical, np.float32)
+    for group in replica_groups(m_physical, replication):
+        alive = [d for d in group if d not in dead]
+        if not alive:
+            raise RuntimeError(f"replica group {group} entirely dead")
+        w[alive[0]] = 1.0
+    return w
+
+
+def expected_tolerated_failures(m_logical: int, replication: int = 2) -> float:
+    """Birthday-paradox estimate: ~sqrt(M) random failures before some
+    replica pair collides (paper §V-A, r=2)."""
+    if replication != 2:
+        raise NotImplementedError("paper analyses r=2")
+    return math.sqrt(math.pi * m_logical / 2)
+
+
+def simulate_random_failures(m_logical: int, replication: int,
+                             num_failures: int, trials: int = 1000,
+                             seed: int = 0) -> float:
+    """Empirical P[protocol completes] under ``num_failures`` random dead
+    physical nodes (validates the sqrt(M) claim; see tests)."""
+    rng = np.random.RandomState(seed)
+    m_phys = m_logical * replication
+    ok = 0
+    for _ in range(trials):
+        dead = set(rng.choice(m_phys, size=num_failures, replace=False).tolist())
+        try:
+            contribution_weights(m_phys, replication, dead)
+            ok += 1
+        except RuntimeError:
+            pass
+    return ok / trials

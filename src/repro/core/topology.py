@@ -1,0 +1,217 @@
+"""Heterogeneous-degree nested butterfly topology (paper §II-A.3, §IV-B).
+
+A plan over M nodes is an ordered degree sequence ``[k_1, ..., k_D]`` with
+``prod(k) == M``.  Node ids are mixed-radix numbers with digit 1 most
+significant; the layer-l group of a node is the set of k_l nodes that differ
+from it only in digit l.  The hashed index space [0, 2^32) is recursively
+range-partitioned: at layer l each group splits its current range into k_l
+contiguous sub-ranges, one per digit value — so after D layers node n owns
+exactly the [n/M, (n+1)/M) slice of the hashed space.
+
+Degenerate corners of the family (paper §II):
+  * ``[M]``      -> round-robin (single all-to-all stage)
+  * ``[2]*log M`` -> binary butterfly
+  * anything else -> the paper's hybrid.
+
+The planner also carries the paper's packet-size/compression model (Fig 5)
+and an alpha-beta-floor cost estimate used by the tuner (Fig 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .netmodel import EC2_2013, Fabric
+
+SPACE = 1 << 32  # hashed index space size
+
+
+def _check_degrees(num_nodes: int, degrees: Sequence[int]) -> None:
+    if math.prod(degrees) != num_nodes:
+        raise ValueError(f"prod({list(degrees)}) != {num_nodes}")
+    if any(k < 2 for k in degrees) and list(degrees) != [1]:
+        raise ValueError(f"degrees must be >= 2, got {list(degrees)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ButterflyPlan:
+    """Mixed-radix nested butterfly over ``num_nodes`` nodes."""
+
+    num_nodes: int
+    degrees: Tuple[int, ...]
+
+    def __post_init__(self):
+        if self.num_nodes == 1:
+            object.__setattr__(self, "degrees", tuple())
+            return
+        _check_degrees(self.num_nodes, self.degrees)
+
+    # -- mixed-radix structure -------------------------------------------------
+    @property
+    def depth(self) -> int:
+        return len(self.degrees)
+
+    def strides(self) -> List[int]:
+        """stride[l] = prod of degrees *below* layer l (digit 1 most significant)."""
+        out, s = [], 1
+        for k in reversed(self.degrees):
+            out.append(s)
+            s *= k
+        return list(reversed(out))
+
+    def digits(self, node: int) -> List[int]:
+        out = []
+        for k, s in zip(self.degrees, self.strides()):
+            out.append((node // s) % k)
+        return out
+
+    def group_members(self, node: int, layer: int) -> List[int]:
+        """The k_l nodes (incl. ``node``) differing only in digit ``layer``."""
+        k, s = self.degrees[layer], self.strides()[layer]
+        base = node - ((node // s) % k) * s
+        return [base + t * s for t in range(k)]
+
+    def axis_index_groups(self, layer: int) -> List[List[int]]:
+        """Partition of [0, M) into layer-l groups (for jax collectives)."""
+        seen, groups = set(), []
+        for n in range(self.num_nodes):
+            if n in seen:
+                continue
+            g = self.group_members(n, layer)
+            groups.append(g)
+            seen.update(g)
+        return groups
+
+    # -- range partition ---------------------------------------------------------
+    def range_at(self, node: int, layer: int) -> Tuple[int, int]:
+        """Hashed-space range owned by ``node`` *after* ``layer`` layers.
+
+        layer=0 -> full space; layer=D -> the node's final 1/M slice.
+        """
+        lo, hi = 0, SPACE
+        digs = self.digits(node)
+        for l in range(layer):
+            k = self.degrees[l]
+            span = (hi - lo) // k
+            new_lo = lo + digs[l] * span
+            # last sub-range absorbs the division remainder so the ranges
+            # tile exactly (matches edges_at, which pins e[-1] to hi)
+            hi = new_lo + span if digs[l] < k - 1 else hi
+            lo = new_lo
+        return lo, hi
+
+    def edges_at(self, node: int, layer: int) -> np.ndarray:
+        """uint-64 range boundaries [k_l + 1] splitting node's layer-l range."""
+        lo, hi = self.range_at(node, layer)
+        k = self.degrees[layer]
+        span = (hi - lo) // k
+        e = lo + span * np.arange(k + 1, dtype=np.int64)
+        e[-1] = hi
+        return e
+
+    def all_edges(self, layer: int) -> np.ndarray:
+        """[M, k_l + 1] per-node range edges at ``layer`` (device backend)."""
+        return np.stack([self.edges_at(n, layer) for n in range(self.num_nodes)])
+
+    # -- packet-size / compression model (Fig 5) ---------------------------------
+    def expected_counts(self, n0: float, total_range: float) -> List[float]:
+        """E[#unique indices] held per node after each layer.
+
+        n0 uniform-hashed indices per node over ``total_range`` ids.  Union of
+        k Bernoulli(p) subsets has density 1-(1-p)^k.
+        """
+        counts = [float(n0)]
+        r = float(total_range)
+        for k in self.degrees:
+            p = min(counts[-1] / r, 1.0)
+            r_next = r / k
+            counts.append(r_next * (1.0 - (1.0 - p) ** k))
+            r = r_next
+        return counts
+
+    def packet_bytes(self, n0: float, total_range: float,
+                     bytes_per_entry: float = 12.0) -> List[float]:
+        """Modeled per-destination message size at each down layer (Fig 5)."""
+        counts = self.expected_counts(n0, total_range)
+        return [counts[l] / self.degrees[l] * bytes_per_entry
+                for l in range(self.depth)]
+
+    # -- cost model (Fig 6) --------------------------------------------------------
+    def modeled_time(self, n0: float, total_range: float,
+                     fabric: Fabric = EC2_2013, bytes_per_entry: float = 12.0,
+                     merge_ns_per_entry: float = 4.0,
+                     serial_nic: bool = True) -> float:
+        """End-to-end modeled config+reduce time (s) for one allreduce."""
+        counts = self.expected_counts(n0, total_range)
+        t = 0.0
+        for l, k in enumerate(self.degrees):
+            down_bytes = counts[l] / k * bytes_per_entry
+            t += fabric.stage_time(down_bytes, k - 1, serial=serial_nic)
+            # received k-1 buckets + own; merge cost ~ entries * log2(k)
+            t += counts[l] * max(math.log2(k), 1.0) * merge_ns_per_entry * 1e-9
+        for l in reversed(range(self.depth)):
+            k = self.degrees[l]
+            # Each node returns to each peer only the piece that peer asked
+            # for (~ what the peer sent down): counts[l]/k entries, values only.
+            up_bytes = counts[l] / k * bytes_per_entry
+            t += fabric.stage_time(up_bytes, k - 1, serial=serial_nic)
+        return t
+
+    def __str__(self):
+        return "x".join(str(k) for k in self.degrees) or "1"
+
+
+# ---------------------------------------------------------------------------
+# Degree-sequence enumeration + tuner (paper Fig 6: optimum 16x4 at M=64)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def ordered_factorizations(m: int, max_depth: int = 6) -> Tuple[Tuple[int, ...], ...]:
+    """All ordered factorizations of m into factors >= 2 (depth-limited)."""
+    if m == 1:
+        return ((),)
+    out = []
+
+    def rec(rem: int, prefix: Tuple[int, ...]):
+        if rem == 1 and prefix:
+            out.append(prefix)
+            return
+        if len(prefix) >= max_depth:
+            return
+        for k in range(2, rem + 1):
+            if rem % k == 0:
+                rec(rem // k, prefix + (k,))
+
+    rec(m, ())
+    return tuple(out)
+
+
+def tune(num_nodes: int, n0: float, total_range: float,
+         fabric: Fabric = EC2_2013, bytes_per_entry: float = 12.0,
+         serial_nic: bool = True, top: int = 0):
+    """Rank all degree sequences by modeled time; return best (or top-n list)."""
+    scored = []
+    for degs in ordered_factorizations(num_nodes):
+        plan = ButterflyPlan(num_nodes, degs)
+        scored.append((plan.modeled_time(n0, total_range, fabric,
+                                         bytes_per_entry,
+                                         serial_nic=serial_nic), plan))
+    scored.sort(key=lambda x: x[0])
+    if top:
+        return scored[:top]
+    return scored[0][1]
+
+
+def roundrobin_plan(num_nodes: int) -> ButterflyPlan:
+    return ButterflyPlan(num_nodes, (num_nodes,)) if num_nodes > 1 else ButterflyPlan(1, ())
+
+
+def binary_plan(num_nodes: int) -> ButterflyPlan:
+    d = int(math.log2(num_nodes))
+    if 2 ** d != num_nodes:
+        raise ValueError(f"binary butterfly needs power-of-2 nodes, got {num_nodes}")
+    return ButterflyPlan(num_nodes, (2,) * d)

@@ -1,0 +1,77 @@
+"""One-hot MXU scatter-add — the TPU-native form of the paper's merge-sum.
+
+The paper's CPU insight (§III-A): summing sparse vectors by *coherent
+addition of sorted index streams* is ~5x faster than hash tables because it
+matches the memory system.  The TPU analogue: once destinations ``pos`` are
+known (sorted indices make them a cheap cumsum), the scatter-add
+
+    out[p, :] += sum_{i : pos_i = p} val[i, :]
+
+is a matmul  ``out = OneHot(pos)^T @ val``  — which runs on the MXU at full
+throughput instead of serializing through scatter hardware.  This kernel is
+the workhorse behind ``segment_compact`` and ``merge_add``.
+
+Tiling: grid (I, J, K) over (out-rows/bm, width/bn, in-rows/bk), K innermost
+accumulating into the (bm, bn) VMEM out tile.  The one-hot tile (bk, bm) is
+generated in-register from the pos block — it never touches HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, val_ref, out_ref, *, bm: int, bk: int):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pos = pos_ref[...]                                   # [bk] int32
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bk, bm), 1)
+    onehot = (pos[:, None] == rows).astype(jnp.float32)  # [bk, bm]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, val_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())),                        # contract over bk
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_rows", "bm", "bn", "bk", "interpret"))
+def onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
+                       *, bm: int = 128, bn: int = 128, bk: int = 512,
+                       interpret: bool = True) -> jax.Array:
+    """out[num_rows, W] = scatter-add of val [C, W] at rows pos [C].
+
+    Out-of-range pos (e.g. drop bins, padding parked at num_rows) fall off
+    every one-hot tile and vanish — free drop semantics.
+    """
+    c, w = val.shape
+    # pad to tile multiples
+    cp = pl.cdiv(c, bk) * bk
+    wp = pl.cdiv(w, bn) * bn
+    rp = pl.cdiv(num_rows, bm) * bm
+    pos_p = jnp.full((cp,), -1, jnp.int32).at[:c].set(pos.astype(jnp.int32))
+    val_p = jnp.zeros((cp, wp), val.dtype).at[:c, :w].set(val)
+
+    grid = (rp // bm, wp // bn, cp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bm=bm, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.float32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary")),
+        interpret=interpret,
+    )(pos_p, val_p)
+    return out[:num_rows, :w]

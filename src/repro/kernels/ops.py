@@ -1,0 +1,85 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``segment_compact`` / ``merge_add`` here are drop-in, kernel-backed versions
+of the pure-jnp ones in ``core.sparse_vec`` (which remain the oracles).
+``INTERPRET`` switches Pallas to interpret mode off-TPU; on TPU hardware the
+same BlockSpecs compile natively.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_vec import SENTINEL, SparseChunk
+from .onehot_scatter import onehot_scatter_add
+from .rank_merge import rank_counts
+from .spmv_ell import spmv_ell
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _compact_positions(idx: jax.Array, out_capacity: int):
+    """Destination row per entry of a sorted idx stream (+ head flags)."""
+    valid = idx != jnp.uint32(SENTINEL)
+    is_head = jnp.concatenate([jnp.ones((1,), bool), idx[1:] != idx[:-1]]) & valid
+    pos = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    pos = jnp.where(valid & (pos < out_capacity), pos, out_capacity)
+    return pos, is_head
+
+
+def segment_compact(chunk: SparseChunk, out_capacity: Optional[int] = None
+                    ) -> SparseChunk:
+    """Kernel-backed coalesce of a sorted chunk (MXU one-hot scatter-add)."""
+    out_capacity = out_capacity or chunk.capacity
+    pos, is_head = _compact_positions(chunk.idx, out_capacity)
+    out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
+    out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
+        chunk.idx, mode="drop")
+    val = chunk.val if chunk.val.ndim == 2 else chunk.val[:, None]
+    out_val = onehot_scatter_add(pos, val, out_capacity, interpret=INTERPRET)
+    out_val = out_val.astype(chunk.val.dtype)
+    if chunk.val.ndim == 1:
+        out_val = out_val[:, 0]
+    return SparseChunk(idx=out_idx, val=out_val)
+
+
+def merge_add(a: SparseChunk, b: SparseChunk,
+              out_capacity: Optional[int] = None) -> SparseChunk:
+    """Kernel-backed merge of two sorted chunks with collision summation.
+
+    1. merge ranks via the blocked compare kernel (no data-dependent loop)
+    2. build the merged idx stream with one scatter
+    3. coalesce values straight from the *inputs* with a single fused
+       one-hot matmul: final_pos[e] = compact_pos[rank[e]].
+    """
+    ca, cb = a.capacity, b.capacity
+    out_capacity = out_capacity or (ca + cb)
+    rank_a = jnp.arange(ca, dtype=jnp.int32) + rank_counts(
+        a.idx, b.idx, strict=True, interpret=INTERPRET)
+    rank_b = jnp.arange(cb, dtype=jnp.int32) + rank_counts(
+        b.idx, a.idx, strict=False, interpret=INTERPRET)
+    merged_idx = jnp.zeros((ca + cb,), jnp.uint32)
+    merged_idx = merged_idx.at[rank_a].set(a.idx)
+    merged_idx = merged_idx.at[rank_b].set(b.idx)
+    pos, is_head = _compact_positions(merged_idx, out_capacity)
+    out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
+    out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
+        merged_idx, mode="drop")
+    # entry e of (a ++ b) lands at compact position pos[rank_e]
+    ranks = jnp.concatenate([rank_a, rank_b])
+    final_pos = pos[ranks]
+    val_a = a.val if a.val.ndim == 2 else a.val[:, None]
+    val_b = b.val if b.val.ndim == 2 else b.val[:, None]
+    cat = jnp.concatenate([val_a, val_b], axis=0)
+    out_val = onehot_scatter_add(final_pos, cat, out_capacity,
+                                 interpret=INTERPRET).astype(a.val.dtype)
+    if a.val.ndim == 1:
+        out_val = out_val[:, 0]
+    return SparseChunk(idx=out_idx, val=out_val)
+
+
+def spmv(cols: jax.Array, weights: jax.Array, x: jax.Array) -> jax.Array:
+    """ELL SpMV (PageRank hotspot)."""
+    return spmv_ell(cols, weights, x, interpret=INTERPRET)

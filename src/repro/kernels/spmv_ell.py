@@ -1,0 +1,52 @@
+"""Blocked ELL SpMV kernel — PageRank's G @ P product (paper §I-A.2).
+
+Edge-partitioned PageRank computes Q_i = G_i P_i per node; after the hash
+permutation the column structure is uniform, so ELL (fixed nonzeros/row,
+padded) is a natural TPU layout: dense [R, K] index / weight tiles, aligned
+loads, and the gather from the (VMEM-resident) input slice.
+
+Tiling: grid over row blocks; the dense input vector x lives in VMEM whole
+(the per-node inbound slice after the sparse allreduce is small — that is
+the point of the primitive).  Gather + multiply + row-sum per block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cols_ref, w_ref, x_ref, y_ref):
+    cols = cols_ref[...]                       # [bm, K] int32, -1 padding
+    w = w_ref[...]                             # [bm, K]
+    x = x_ref[...]                             # [N] whole vector in VMEM
+    safe = jnp.maximum(cols, 0)
+    g = jnp.take(x, safe.reshape(-1), axis=0).reshape(cols.shape)
+    g = jnp.where(cols >= 0, g, 0.0)
+    y_ref[...] = jnp.sum(w * g, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def spmv_ell(cols: jax.Array, weights: jax.Array, x: jax.Array,
+             *, bm: int = 256, interpret: bool = True) -> jax.Array:
+    """y[r] = sum_k weights[r,k] * x[cols[r,k]];  cols<0 are padding."""
+    r, k = cols.shape
+    rp = pl.cdiv(r, bm) * bm
+    cols_p = jnp.full((rp, k), -1, jnp.int32).at[:r].set(cols.astype(jnp.int32))
+    w_p = jnp.zeros((rp, k), weights.dtype).at[:r].set(weights)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rp // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, k), lambda i: (i, 0)),
+                  pl.BlockSpec(x.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rp,), jnp.float32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(cols_p, w_p, x.astype(jnp.float32))
+    return out[:r]

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, ASSIGNED_SHAPES, SHAPES, get_config, pair_plan)
+from repro.core.netmodel import (HBM_BYTES_PER_S, ICI_BYTES_PER_S,
+                                 PEAK_FLOPS_BF16)
+from repro.launch.hlo_stats import (collective_stats, dot_flops,
+                                    total_collective_bytes)
+from repro.launch.memmodel import modeled_memory
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (decode_arg_specs, opt_specs, params_specs,
+                                prefill_batch_specs, train_batch_specs)
+from repro.train.step import (make_decode_step, make_prefill_step,
+                              make_train_step, mesh_ctx)
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def _auto_microbatch(global_batch: int, seq: int, mesh,
+                     target_tokens: int = 8192) -> int:
+    """Smallest divisor of the per-device batch whose microbatch holds
+    <= target_tokens tokens (bounds activation / MoE-dispatch memory)."""
+    dp = mesh.devices.size // mesh.shape["model"]
+    b_loc = max(1, global_batch // dp)
+    tokens_dev = b_loc * seq
+    need = max(1, -(-tokens_dev // target_tokens))
+    for micro in range(need, b_loc + 1):
+        if b_loc % micro == 0:
+            return micro
+    return b_loc
+
+
+def lower_pair(arch: str, shape_name: str, mesh, sync: str = "ring",
+               overrides: Optional[Dict[str, Any]] = None,
+               microbatch: Optional[int] = None,
+               dp_degrees: Optional[Dict[str, tuple]] = None,
+               serve2d: bool = False):
+    """Lower (arch x shape) on mesh; returns (lowered, cfg, meta).
+
+    ``overrides``: dataclasses.replace kwargs on the ModelConfig (perf
+    hillclimb knobs: moe_capacity, remat_policy, tie_embeddings, ...).
+    """
+    import dataclasses as _dc
+    variant = pair_plan(arch, shape_name)
+    if variant is None:
+        return None, None, {"skipped": "long_500k inapplicable (DESIGN.md)"}
+    cfg = get_config(arch, variant)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mc = mesh_ctx(mesh)
+
+    if shape.kind == "train":
+        micro = microbatch or _auto_microbatch(shape.global_batch,
+                                               shape.seq_len, mesh)
+        dp = mesh.devices.size // mesh.shape["model"]
+        hint = max(8, shape.global_batch * shape.seq_len // dp)
+        step, _ = make_train_step(cfg, mesh, sync=sync, donate=True,
+                                  microbatch=micro, sparse_tokens_hint=hint,
+                                  dp_degrees=dp_degrees)
+        lowered = step.lower(params_specs(cfg, mc.tp), opt_specs(cfg, mc.tp),
+                             train_batch_specs(cfg, shape))
+        tokens = shape.global_batch * shape.seq_len
+        flops_factor = 6.0
+    elif shape.kind == "prefill":
+        step, _ = make_prefill_step(cfg, mesh, max_seq=shape.seq_len)
+        lowered = step.lower(params_specs(cfg, mc.tp),
+                             prefill_batch_specs(cfg, shape))
+        tokens = shape.global_batch * shape.seq_len
+        flops_factor = 2.0
+    else:
+        seq_sharded = shape.kind == "decode_long"
+        shards = mesh.shape["data"] if seq_sharded else 1
+        step, _ = make_decode_step(cfg, mesh, seq_sharded=seq_sharded,
+                                   seq_shards=shards, serve2d=serve2d)
+        token, pos, cache, extras = decode_arg_specs(cfg, shape, mesh,
+                                                     seq_sharded)
+        lowered = step.lower(params_specs(cfg, mc.tp), token, pos, cache,
+                             *extras)
+        tokens = shape.global_batch
+        flops_factor = 2.0
+    meta = {"variant": variant, "tokens": tokens,
+            "flops_factor": flops_factor,
+            "active_params": cfg.active_param_count(),
+            "total_params": cfg.param_count(),
+            "n_periods": cfg.n_periods,
+            "microbatch": locals().get("micro", 1),
+            "cfg_obj": cfg, "shape_obj": shape}
+    return lowered, cfg, meta
+
+
+def analyse(lowered, cfg, meta, mesh, parse_hlo: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    chips = mesh.devices.size
+    out: Dict[str, Any] = {k: v for k, v in meta.items()
+                           if k not in ("cfg_obj", "shape_obj")}
+    out.update({"cfg_obj": meta["cfg_obj"], "shape_obj": meta["shape_obj"]})
+    out.update({"chips": int(chips), "compile_s": round(compile_s, 1),
+                "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names)})
+
+    try:
+        mem = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                out[k] = int(v)
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["bytes_per_device"] = int(live)
+    except Exception as e:  # pragma: no cover
+        out["memory_analysis_error"] = str(e)
+
+    # analytic TPU-target memory (CPU-backend temp_size over-schedules remat
+    # regions — see EXPERIMENTS.md §Dry-run probes)
+    try:
+        mm = modeled_memory(meta["cfg_obj"], meta["shape_obj"], mesh,
+                            meta.get("microbatch", 1))
+        out["modeled_memory"] = {k: round(v / 1e9, 3) for k, v in mm.items()}
+        out["fits_hbm"] = bool(mm["total"] < HBM_PER_CHIP)
+    except Exception as e:  # pragma: no cover
+        out["memmodel_error"] = str(e)
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        out["hlo_flops"] = float(cost.get("flops", -1))
+        out["hlo_bytes"] = float(cost.get("bytes accessed", -1))
+    except Exception as e:  # pragma: no cover
+        out["cost_analysis_error"] = str(e)
+
+    if parse_hlo:
+        try:
+            text = compiled.as_text()
+            stats = collective_stats(text, default_trip=meta["n_periods"])
+            out["collectives"] = {k: {"count": v["count"],
+                                      "bytes": round(v["bytes"])}
+                                  for k, v in stats.items()}
+            out["collective_bytes"] = float(total_collective_bytes(stats))
+            out["hlo_text_bytes"] = len(text)
+            corrected, flat = dot_flops(text, default_trip=meta["n_periods"])
+            out["dot_flops_corrected"] = corrected
+            out["dot_flops_flat"] = flat
+            loop_factor = corrected / flat if flat > 0 else 1.0
+            out["loop_expansion_factor"] = round(loop_factor, 2)
+            # cost_analysis counts while bodies once; scale by the measured
+            # loop expansion (dots dominate both flops and bytes)
+            out["hlo_flops_corrected"] = out.get("hlo_flops", 0.0) * loop_factor
+            out["hlo_bytes_corrected"] = out.get("hlo_bytes", 0.0) * loop_factor
+        except Exception as e:  # pragma: no cover
+            out["hlo_parse_error"] = str(e)
+
+    # roofline terms (per-device / per-chip view)
+    flops = out.get("hlo_flops_corrected", out.get("hlo_flops", 0.0))
+    hbytes = out.get("hlo_bytes_corrected", out.get("hlo_bytes", 0.0))
+    cbytes = out.get("collective_bytes", 0.0)
+    out["t_compute_s"] = flops / PEAK_FLOPS_BF16
+    out["t_memory_s"] = hbytes / HBM_BYTES_PER_S
+    out["t_collective_s"] = cbytes / ICI_BYTES_PER_S
+    terms = {"compute": out["t_compute_s"], "memory": out["t_memory_s"],
+             "collective": out["t_collective_s"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    model_flops = (meta["flops_factor"] * meta["active_params"]
+                   * meta["tokens"]) / chips
+    out["model_flops_per_chip"] = model_flops
+    out["useful_compute_ratio"] = (model_flops / flops) if flops > 0 else None
+    return out
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, sync: str,
+             outdir: Optional[str], parse_hlo: bool = True,
+             overrides: Optional[Dict[str, Any]] = None,
+             microbatch: Optional[int] = None,
+             dp_degrees: Optional[Dict[str, tuple]] = None,
+             serve2d: bool = False,
+             tag_suffix: str = "") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, cfg, meta = lower_pair(arch, shape_name, mesh, sync,
+                                    overrides=overrides, microbatch=microbatch,
+                                    dp_degrees=dp_degrees, serve2d=serve2d)
+    if lowered is None:
+        res = dict(meta)
+        res.update({"arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if multi_pod else "16x16"})
+    else:
+        res = analyse(lowered, cfg, meta, mesh, parse_hlo)
+        res.update({"arch": arch, "shape": shape_name, "sync": sync,
+                    "overrides": overrides or {}})
+    res.pop("cfg_obj", None)
+    res.pop("shape_obj", None)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{res.get('mesh', 'skip')}_{sync}{tag_suffix}"
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2, default=str)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--sync", default="ring", choices=["ring", "hier", "sparse"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip HLO text parsing (faster)")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(ASSIGNED_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_pair(arch, shape, mp, args.sync, args.out,
+                                 parse_hlo=not args.no_hlo)
+                    if "skipped" in r:
+                        print(f"SKIP {tag}: {r['skipped']}")
+                        continue
+                    print(f"OK   {tag}: compile {r['compile_s']}s "
+                          f"mem/dev {r.get('bytes_per_device', 0)/1e9:.2f}GB "
+                          f"flops {r.get('hlo_flops', 0):.3g} "
+                          f"coll {r.get('collective_bytes', 0)/1e6:.1f}MB "
+                          f"bottleneck={r.get('bottleneck')}")
+                except Exception as e:
+                    failures.append((tag, str(e)))
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall dry-runs green")
+
+
+if __name__ == "__main__":
+    main()

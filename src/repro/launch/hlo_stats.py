@@ -1,0 +1,244 @@
+"""Collective-traffic extraction from compiled HLO text.
+
+``cost_analysis`` has no collective-bytes term, so we parse the optimized
+(post-SPMD) HLO.  Two subtleties:
+
+1. Per-device bytes moved per op derive from result shape, op semantics and
+   replica-group size k:
+       all-reduce          2 * size * (k-1)/k      (ring)
+       all-gather          size * (k-1)/k          (receives others' shards)
+       reduce-scatter      size * (k-1)            (operand = k * result)
+       all-to-all          size * (k-1)/k
+       collective-permute  size
+
+2. Our layer stacks run under lax.scan => collectives inside the while body
+   appear ONCE in text but execute trip-count times.  We build the
+   computation call graph, find while bodies, and multiply their collectives
+   by the loop trip count (recovered from the while condition's comparison
+   constant where possible, else the caller-supplied default).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_OP_RE = re.compile(
+    r"=\s+(?:\()?((?:[a-z0-9]+)\[[0-9,]*\][^ ]*)\)?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|branch_computations=\{)="
+                      r"?%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?\)?.*?condition=%?([\w.\-]+),\s*"
+                       r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"compare\([^)]*\).*direction=LT")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """name -> body text, split on top-level '%name (...) -> ... {' blocks."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", line)
+            if m and not line.startswith(" "):
+                cur_name = m.group(1)
+                cur_lines = [line]
+                depth = line.count("{") - line.count("}")
+            continue
+        cur_lines.append(line)
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+    return comps
+
+
+_KIND_RE = re.compile(
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _line_bytes(line: str) -> Optional[Tuple[str, float]]:
+    if "=" not in line:
+        return None
+    m = _KIND_RE.search(line)
+    if not m or m.group(2) == "-done":
+        return None
+    kind = m.group(1)
+    # result may be a tuple (all-to-all over k>1 groups): sum every shape
+    # between '=' and the op keyword
+    prefix = line[line.index("=") + 1: m.start()]
+    size = _shape_bytes(prefix)
+    k = 1
+    g = _GROUPS_RE.search(line)
+    if g:
+        k = len(g.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            k = int(gi.group(2))
+    k = max(k, 2)
+    if kind == "all-reduce":
+        moved = 2.0 * size * (k - 1) / k
+    elif kind == "all-gather":
+        moved = size * (k - 1) / k
+    elif kind == "reduce-scatter":
+        moved = size * (k - 1)
+    elif kind == "all-to-all":
+        moved = size * (k - 1) / k
+    else:
+        moved = size
+    return kind, moved
+
+
+def collective_stats(hlo_text: str, default_trip: int = 1
+                     ) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, bytes} per device, loop-aware.
+
+    default_trip multiplies collectives inside while bodies whose trip count
+    cannot be recovered from the HLO (pass the layer-scan length).
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:  # fallback: flat count
+        comps = {"__all__": hlo_text}
+    mult = _computation_multipliers(comps, default_trip)
+
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0})
+    for name, body in comps.items():
+        m = mult.get(name, 1.0)
+        for line in body.splitlines():
+            r = _line_bytes(line)
+            if r is None:
+                continue
+            kind, moved = r
+            out[kind]["count"] += m
+            out[kind]["bytes"] += moved * m
+    return dict(out)
+
+
+_DOT_LINE_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+\[[0-9,]*\])[^=]*?"
+    r"dot\(\s*(?:[a-z0-9]+\[([0-9,]*)\][^%]*)?%([\w.\-]+)")
+_DEF_RE = re.compile(r"^\s+%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dims(s: str):
+    return [int(d) for d in s.split(",") if d]
+
+
+def _computation_multipliers(comps: Dict[str, str], default_trip: int
+                             ) -> Dict[str, float]:
+    """Trip-count multiplier per computation (while bodies + callees)."""
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    for name, body in comps.items():
+        for wm in re.finditer(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                              body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trip = _recover_trip(comps.get(cond, ""), default_trip)
+            for target in (wbody, cond):
+                if target in mult:
+                    mult[target] = max(mult[target], float(trip))
+    changed, guard = True, 0
+    while changed and guard < 30:
+        changed, guard = False, guard + 1
+        for name, body in comps.items():
+            m = mult.get(name, 1.0)
+            if m == 1.0:
+                continue
+            for cm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", body):
+                t = cm.group(1)
+                if t in mult and mult[t] < m:
+                    mult[t] = m
+                    changed = True
+            # nested while loops multiply
+            for wm in re.finditer(
+                    r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", body):
+                cond, wbody = wm.group(1), wm.group(2)
+                trip = _recover_trip(comps.get(cond, ""), default_trip)
+                for target in (wbody, cond):
+                    if target in mult and mult[target] < m * trip:
+                        mult[target] = m * trip
+                        changed = True
+    return mult
+
+
+def dot_flops(hlo_text: str, default_trip: int = 1):
+    """(loop-corrected, flat) matmul FLOPs parsed from HLO dots.
+
+    XLA's cost_analysis counts while bodies ONCE (verified empirically);
+    this walks computations with trip multipliers.  Operand shapes are
+    resolved through each computation's instruction definitions (post-opt
+    HLO references operands by name).  Elementwise FLOPs excluded (dots
+    dominate).  The corrected/flat ratio is the loop-expansion factor.
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        comps = {"__all__": hlo_text}
+    mult = _computation_multipliers(comps, default_trip)
+    total = flat = 0.0
+    for name, body in comps.items():
+        m = mult.get(name, 1.0)
+        shapes: Dict[str, list] = {}
+        for line in body.splitlines():
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = _dims(dm.group(3))
+        for line in body.splitlines():
+            if " dot(" not in line:
+                continue
+            dm = _DOT_LINE_RE.search(line)
+            if not dm:
+                continue
+            res = _dims(re.search(r"\[([0-9,]*)\]", dm.group(2)).group(1))
+            lhs = _dims(dm.group(3)) if dm.group(3) else \
+                shapes.get(dm.group(4), [])
+            cm = _LHS_C_RE.search(line)
+            cdims = _dims(cm.group(1)) if cm else []
+            k = 1
+            for ci in cdims:
+                if ci < len(lhs):
+                    k *= lhs[ci]
+            n = 1
+            for d in res:
+                n *= d
+            total += 2.0 * n * k * m
+            flat += 2.0 * n * k
+    return total, flat
+
+
+def _recover_trip(cond_text: str, default: int) -> int:
+    """Trip count from 'compare(iter, constant), direction=LT' patterns."""
+    consts = re.findall(r"constant\((\d+)\)", cond_text)
+    cands = [int(c) for c in consts if 1 < int(c) <= 1_000_000]
+    if len(cands) == 1:
+        return cands[0]
+    return default
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["bytes"] for v in stats.values())

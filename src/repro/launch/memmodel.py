@@ -1,0 +1,108 @@
+"""Analytic per-device memory model for the TPU target.
+
+``compiled.memory_analysis()`` on the CPU host backend schedules remat
+regions for host parallelism, so sequential blocks' backward temporaries
+co-live and temp_size grows ~linearly with depth (probes in EXPERIMENTS.md
+§Dry-run) — an artifact of the measurement backend, not of the sharding.
+This model computes what the TPU scheduler's peak would be:
+
+  params   — exact: eval_shape leaves / their PartitionSpec divisors
+  optimizer— exact: 2 x f32 params (AdamW m, v), same shards
+  grads    — exact: f32 params (FSDP leaves: data-sharded)
+  acts     — peak live set: period-scan residuals (block-boundary
+             activations per layer) + one block's working set (attention
+             scores / MoE dispatch buffers / SSM chunk tensors)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import InputShape
+from repro.models.common import ModelConfig
+from repro.models.sharding import full_model_pspec
+from repro.train.step import mesh_ctx
+
+
+def _pspec_divisor(spec, mesh) -> int:
+    div = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            div *= mesh.shape[a]
+    return div
+
+
+def params_bytes_per_device(cfg: ModelConfig, mesh) -> float:
+    mc = mesh_ctx(mesh)
+    from repro.launch.specs import params_specs
+    p = params_specs(cfg, mc.tp)
+    spec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    total = 0.0
+
+    def walk(t, s):
+        nonlocal total
+        if isinstance(t, dict):
+            for k in t:
+                walk(t[k], s[k])
+        else:
+            total += (np.prod(t.shape) * t.dtype.itemsize
+                      / _pspec_divisor(s, mesh))
+    walk(p, spec)
+    return total
+
+
+def modeled_memory(cfg: ModelConfig, shape: InputShape, mesh,
+                   micro: int = 1) -> Dict[str, float]:
+    mc = mesh_ctx(mesh)
+    tp, dp = mc.tp, mc.dp
+    pb = params_bytes_per_device(cfg, mesh)
+    # grads/opt are f32 regardless of param dtype
+    f32_params = pb * (4.0 / np.dtype(cfg.dtype).itemsize)
+
+    out: Dict[str, float] = {"params": pb}
+    if shape.kind == "train":
+        out["optimizer"] = 2.0 * f32_params
+        out["grads"] = 2.0 * f32_params  # accumulator + current
+        b_loc = max(1, shape.global_batch // dp)
+        tok_mb = (b_loc // micro) * shape.seq_len if shape.kind == "train" \
+            else b_loc * shape.seq_len
+        d = cfg.d_model
+        # period residuals: one activation per block boundary per layer
+        resid = cfg.n_layers * 2 * tok_mb * d * 2.0
+        # one block's working set
+        hl = cfg.heads_local(tp)
+        qc = min(1024, shape.seq_len)  # blocked attention query chunk
+        scores = (tok_mb // shape.seq_len) * hl * qc * shape.seq_len * 4.0
+        ffl = max(cfg.d_ff // tp, cfg.expert_d_ff)
+        ffn_ws = 3 * tok_mb * ffl * 2.0
+        if cfg.n_experts:
+            cap_dev = math.ceil(tok_mb * cfg.top_k / tp) * 2
+            moe_ws = 4 * tp * cap_dev * d * 2.0
+            ffn_ws = max(ffn_ws, moe_ws)
+        ssm_ws = 6 * tok_mb * (2 * d // tp) * 4.0 if any(
+            b in ("mamba", "mlstm", "slstm") for b in cfg.pattern) else 0.0
+        out["activations"] = resid + max(scores, ffn_ws, ssm_ws) \
+            + 8 * tok_mb * d * 2.0
+        # vocab logits for one microbatch (f32, vocab-sharded)
+        from repro.models.transformer import padded_vocab
+        out["logits"] = tok_mb * (padded_vocab(cfg, tp) // tp) * 4.0
+    else:
+        b_loc = max(1, shape.global_batch // dp)
+        kvg = cfg.kv_local(tp)
+        n_attn = sum(1 for b in cfg.pattern if b == "attn") * cfg.n_periods
+        s_loc = shape.seq_len // mesh.shape["data"] \
+            if shape.kind == "decode_long" else shape.seq_len
+        out["kv_cache"] = n_attn * b_loc * s_loc * kvg * cfg.hd * 2 * 2.0
+        d = cfg.d_model
+        tok = b_loc * (shape.seq_len if shape.kind == "prefill" else 1)
+        out["activations"] = 12 * tok * d * 2.0
+        from repro.models.transformer import padded_vocab
+        out["logits"] = b_loc * (padded_vocab(cfg, tp) // tp) * 4.0
+    out["total"] = sum(v for k, v in out.items())
+    return out

@@ -1,0 +1,17 @@
+"""Production mesh builders (functions, never module-level constants — jax
+device state must not be touched at import time)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (TPU v5e); 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU smoke tests / examples."""
+    return jax.make_mesh((data, model), ("data", "model"))

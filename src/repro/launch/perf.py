@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""SPerf hillclimb driver — three studies on the three selected pairs.
+
+H1 (paper-representative): gemma3-12b x train_minibatch — gradient-sync
+   mode ring -> hier -> sparse (untied) on the 262k-vocab embedding; the
+   paper's mini-batch regime (SI-A.1).  Metric: collective bytes.
+H2 (most collective-bound): arctic-480b x train_4k — microbatch count
+   (FSDP gathers scale with it) and MoE dispatch capacity factor.
+   Metric: collective bytes vs modeled activation memory.
+H3 (worst useful-compute): jamba-1.5-large-398b x train_4k — remat policy
+   full-recompute -> save-dots.  Metric: corrected HLO FLOPs (compute term).
+
+Each run re-lowers + re-compiles and records the roofline terms; results in
+results/perf/*.json and summarized in EXPERIMENTS.md SPerf.
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import run_pair
+
+
+def study_h1(outdir):
+    runs = [
+        ("h1_ring_tied", dict(sync="ring")),
+        ("h1_ring_untied", dict(sync="ring",
+                                overrides={"tie_embeddings": False})),
+        ("h1_hier_untied", dict(sync="hier",
+                                overrides={"tie_embeddings": False})),
+        ("h1_sparse_untied", dict(sync="sparse",
+                                  overrides={"tie_embeddings": False})),
+        # iteration 4-5: butterfly degree ablation on-device (paper Fig 6
+        # asked of the TPU backend): 16 = round-robin vs 4x4 vs 2x2x2x2
+        ("h1_sparse_4x4", dict(sync="sparse",
+                               overrides={"tie_embeddings": False},
+                               dp_degrees={"data": (4, 4)})),
+        ("h1_sparse_2222", dict(sync="sparse",
+                                overrides={"tie_embeddings": False},
+                                dp_degrees={"data": (2, 2, 2, 2)})),
+    ]
+    out = []
+    for tag, kw in runs:
+        r = run_pair("gemma3-12b", "train_minibatch", False,
+                     kw.pop("sync"), outdir, overrides=kw.get("overrides"),
+                     dp_degrees=kw.get("dp_degrees"),
+                     tag_suffix="_" + tag)
+        out.append((tag, r))
+        _report(tag, r)
+    return out
+
+
+def study_h2(outdir):
+    runs = [
+        ("h2_micro8_cap2.0", dict(microbatch=8)),
+        ("h2_micro4_cap2.0", dict(microbatch=4)),
+        ("h2_micro2_cap2.0", dict(microbatch=2)),
+        ("h2_micro4_cap1.25", dict(microbatch=4,
+                                   overrides={"moe_capacity": 1.25})),
+        # iteration 3: MoE token dedup across TP (activations are replicated
+        # post-psum; without sharding every rank dispatches the same tokens)
+        ("h2_micro4_cap1.25_noshard", dict(
+            microbatch=4, overrides={"moe_capacity": 1.25,
+                                     "moe_token_shard": False})),
+    ]
+    out = []
+    for tag, kw in runs:
+        r = run_pair("arctic-480b", "train_4k", False, "ring", outdir,
+                     overrides=kw.get("overrides"),
+                     microbatch=kw.get("microbatch"), tag_suffix="_" + tag)
+        out.append((tag, r))
+        _report(tag, r)
+    return out
+
+
+def study_h3(outdir):
+    runs = [
+        ("h3_remat_full", dict()),
+        ("h3_remat_dots", dict(overrides={"remat_policy": "dots"})),
+    ]
+    out = []
+    for tag, kw in runs:
+        r = run_pair("jamba-1.5-large-398b", "train_4k", False, "ring",
+                     outdir, overrides=kw.get("overrides"),
+                     tag_suffix="_" + tag)
+        out.append((tag, r))
+        _report(tag, r)
+    return out
+
+
+def _report(tag, r):
+    print(f"{tag:24s} coll {r.get('collective_bytes', 0)/1e9:9.1f} GB  "
+          f"flops {r.get('hlo_flops_corrected', 0):.3g}  "
+          f"t(comp/mem/coll) {r.get('t_compute_s', 0):.3f}/"
+          f"{r.get('t_memory_s', 0):.3f}/{r.get('t_collective_s', 0):.3f} s  "
+          f"actGB {r.get('modeled_memory', {}).get('activations', '?')}",
+          flush=True)
+
+
+def study_h4(outdir):
+    """H4: 2D weight-stationary decode — drop the per-period FSDP weight
+    gathers from the (weight-bound) decode step; batch-replicate KB-scale
+    activations around each projection instead."""
+    runs = [("h4_gather", "command-r-plus-104b", "decode_32k", False),
+            ("h4_serve2d", "command-r-plus-104b", "decode_32k", True),
+            ("h4_long_gather", "command-r-plus-104b", "long_500k", False),
+            ("h4_long_serve2d", "command-r-plus-104b", "long_500k", True),
+            # MoE / hybrid extensions (moe_ffn_2d + mamba_decode_2d)
+            ("h4_arctic_gather", "arctic-480b", "decode_32k", False),
+            ("h4_arctic_serve2d", "arctic-480b", "decode_32k", True),
+            ("h4_jamba_gather", "jamba-1.5-large-398b", "decode_32k", False),
+            ("h4_jamba_serve2d", "jamba-1.5-large-398b", "decode_32k", True),
+            ("h4_jamba_long_g", "jamba-1.5-large-398b", "long_500k", False),
+            ("h4_jamba_long_2d", "jamba-1.5-large-398b", "long_500k", True)]
+    out = []
+    for tag, arch, shape, s2d in runs:
+        r = run_pair(arch, shape, False, "ring",
+                     outdir, serve2d=s2d, tag_suffix="_" + tag)
+        out.append((tag, r))
+        _report(tag, r)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--study", default="all",
+                    choices=["all", "h1", "h2", "h3", "h4"])
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    if args.study in ("all", "h1"):
+        print("== H1: gemma3 sync modes (paper technique) ==")
+        study_h1(args.out)
+    if args.study in ("all", "h2"):
+        print("== H2: arctic microbatch/FSDP-gather + MoE capacity ==")
+        study_h2(args.out)
+    if args.study in ("all", "h3"):
+        print("== H3: jamba remat policy ==")
+        study_h3(args.out)
+    if args.study in ("all", "h4"):
+        print("== H4: 2D weight-stationary decode (command-r) ==")
+        study_h4(args.out)
+
+
+if __name__ == "__main__":
+    main()

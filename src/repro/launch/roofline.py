@@ -1,0 +1,61 @@
+"""Roofline table generator: reads results/dryrun/*.json -> markdown.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+
+Per (arch x shape) on the single-pod 16x16 mesh: the three roofline terms
+(compute / memory / collective, seconds per step per chip), the dominant
+bottleneck, MODEL_FLOPS = 6*N_active*D (or 2*N*D for inference), and the
+useful-compute ratio MODEL_FLOPS / corrected HLO FLOPs.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, ASSIGNED_SHAPES
+
+
+def load_results(dirname: str, mesh: str = "16x16", sync: str = "ring"):
+    out = {}
+    for f in glob.glob(os.path.join(dirname, f"*_{mesh}_{sync}.json")):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_row(arch, shape, d):
+    if d is None or "skipped" in d:
+        return f"| {arch} | {shape} | — | — | — | skip (DESIGN.md) | — | — |"
+    tc, tm, tl = d.get("t_compute_s", 0), d.get("t_memory_s", 0), \
+        d.get("t_collective_s", 0)
+    ratio = d.get("useful_compute_ratio")
+    rs = f"{ratio:.2f}" if ratio else "—"
+    fits = "yes" if d.get("fits_hbm") else "NO"
+    return (f"| {arch} | {shape} | {tc:.3f} | {tm:.3f} | {tl:.3f} | "
+            f"**{d.get('bottleneck', '?')}** | {rs} | {fits} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    res = load_results(args.dir, args.mesh)
+    print(f"### Roofline table — {args.mesh} mesh (per-chip seconds/step)\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | useful ratio | fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in ASSIGNED_SHAPES:
+            print(fmt_row(arch, shape, res.get((arch, shape))))
+    # summary
+    bn = {}
+    for d in res.values():
+        bn[d.get("bottleneck")] = bn.get(d.get("bottleneck"), 0) + 1
+    print(f"\nbottleneck distribution: {bn}")
+
+
+if __name__ == "__main__":
+    main()

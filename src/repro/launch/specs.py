@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) pair.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers and
+compiles against these.  For [vlm]/[audio] archs the modality frontend is a
+stub: ``input_specs`` hands the backbone precomputed patch/frame embeddings
+of the right shape (the one sanctioned carve-out).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import InputShape
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamW
+from repro.train.step import init_cache_global, mesh_ctx
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, t = shape.global_batch, shape.seq_len
+    t_text = t - cfg.img_tokens if cfg.img_tokens else t
+    out = {"tokens": sds((b, t_text), jnp.int32),
+           "labels": sds((b, t_text), jnp.int32)}
+    if cfg.img_tokens:
+        out["img_embeds"] = sds((b, cfg.img_tokens, cfg.d_model), jnp.float32)
+    if cfg.enc_layers:
+        out["enc_frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, t = shape.global_batch, shape.seq_len
+    t_text = t - cfg.img_tokens if cfg.img_tokens else t
+    out = {"tokens": sds((b, t_text), jnp.int32)}
+    if cfg.img_tokens:
+        out["img_embeds"] = sds((b, cfg.img_tokens, cfg.d_model), jnp.float32)
+    if cfg.enc_layers:
+        out["enc_frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def params_specs(cfg: ModelConfig, tp: int):
+    from repro.models import transformer as T
+    return jax.eval_shape(lambda: T.init_params(cfg, tp))
+
+
+def opt_specs(cfg: ModelConfig, tp: int):
+    p = params_specs(cfg, tp)
+    return jax.eval_shape(lambda q: AdamW().init(q), p)
+
+
+def decode_arg_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                     seq_sharded: bool):
+    mc = mesh_ctx(mesh)
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: init_cache_global(cfg, mc, b, shape.seq_len, seq_sharded))
+    token = sds((b,), jnp.int32)
+    pos = sds((b,), jnp.int32)
+    extras = ()
+    if cfg.enc_layers:
+        kvg = cfg.kv_local(mc.tp) * mc.tp
+        cc = (sds((cfg.n_periods, b, cfg.enc_seq, kvg, cfg.hd), cfg.dtype),
+              sds((cfg.n_periods, b, cfg.enc_seq, kvg, cfg.hd), cfg.dtype))
+        extras = (cc,)
+    return token, pos, cache, extras

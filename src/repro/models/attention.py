@@ -1,0 +1,409 @@
+"""GQA attention under explicit tensor parallelism (heads on "model" axis).
+
+Variants:
+  * ``attn_train``            — full-sequence causal/bidirectional, optional
+                                 sliding window (per-layer traced scalar so a
+                                 gemma-style local:global pattern scans).
+  * ``attn_decode``           — one token vs a [B, S, KV, hd] cache
+                                 (batch sharded over data).
+  * ``attn_decode_splitkv``   — one token vs a *sequence-sharded* cache:
+                                 each data shard holds S/dp cache slots and
+                                 contributes partial softmax stats combined
+                                 with a psum log-sum-exp (flash-decoding,
+                                 TPU-adapted) — this is what makes 500k-token
+                                 decode feasible for attention archs.
+
+Head padding: when n_heads % tp != 0 the per-device head count is rounded up
+(cfg.heads_local); the padded heads are ordinary extra capacity (zero-init
+wo rows) — they cost FLOPs, which the roofline bookkeeping charges honestly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, dense_init, rope
+
+NEG = -1e30
+
+
+def attn_params(key, cfg: ModelConfig, tp: int, dtype):
+    hl, kvl, hd, d = cfg.heads_local(tp), cfg.kv_local(tp), cfg.hd, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hl * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kvl * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kvl * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (hl * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hl * hd,), dtype)
+        p["bk"] = jnp.zeros((kvl * hd,), dtype)
+        p["bv"] = jnp.zeros((kvl * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, tp: int):
+    b, t, _ = x.shape
+    hl, kvl, hd = cfg.heads_local(tp), cfg.kv_local(tp), cfg.hd
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    k = jnp.einsum("btd,dh->bth", x, p["wk"])
+    v = jnp.einsum("btd,dh->bth", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(b, t, hl, hd), k.reshape(b, t, kvl, hd),
+            v.reshape(b, t, kvl, hd))
+
+
+def _group_scores_to_out(q, k, v, mask, cfg: ModelConfig, tp: int):
+    """q [B,T,Hl,hd], k/v [B,S,KVl,hd], mask [T,S] or [B,T,S] -> [B,T,Hl*hd]."""
+    b, t, hl, hd = q.shape
+    kvl = k.shape[2]
+    g = hl // kvl if hl % kvl == 0 else 0
+    if g == 0:  # padded heads not divisible by kv: map head->kv by ratio
+        qk_map = (jnp.arange(hl) * kvl) // hl
+        k = jnp.take(k, qk_map, axis=2)          # [B,S,Hl,hd]
+        v = jnp.take(v, qk_map, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(hd))
+        scores = jnp.where(mask[..., None, :, :] if mask.ndim == 2 else
+                           mask[:, None], scores, NEG)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhts,bshd->bthd", w, v)
+    else:
+        qg = q.reshape(b, t, kvl, g, hd)
+        scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(hd))
+        m = mask if mask.ndim == 3 else mask[None]
+        scores = jnp.where(m[:, None, None], scores, NEG)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgts,bskd->btkgd", w, v).reshape(b, t, hl, hd)
+    return out.reshape(b, t, hl * hd)
+
+
+def attn_train(p, x: jax.Array, cfg: ModelConfig, tp_axis: str, tp: int,
+               window, positions: Optional[jax.Array] = None,
+               causal: bool = True, return_kv: bool = False):
+    """Full-sequence attention.  window: traced scalar (0 = full)."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, tp)
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    ti = jnp.arange(t, dtype=jnp.int32)
+    rel = ti[:, None] - ti[None, :]
+    mask = jnp.ones((t, t), bool) if not causal else (rel >= 0)
+    w_eff = jnp.where(window > 0, window, t + 1)
+    if causal:
+        mask = mask & (rel < w_eff)
+    out = _group_scores_to_out(q, k, v, mask, cfg, tp)
+    y = jnp.einsum("bth,hd->btd", out, p["wo"])
+    y = lax.psum(y, tp_axis)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+BLOCKED_ATTN_THRESHOLD = 8192
+Q_CHUNK = 1024
+
+
+def attn_train_blocked(p, x: jax.Array, cfg: ModelConfig, tp_axis: str,
+                       tp: int, window, positions: Optional[jax.Array] = None,
+                       causal: bool = True, return_kv: bool = False):
+    """Query-chunked attention for long sequences (flash-style memory):
+    scores materialize per q-chunk [B, heads, Q_CHUNK, S] instead of
+    [B, heads, S, S].  Numerics identical to attn_train (full softmax row
+    per chunk — no online rescaling needed)."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, tp)
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    qc = Q_CHUNK
+    nchunk = t // qc
+    assert t % qc == 0, f"seq {t} % {qc}"
+    si = jnp.arange(t, dtype=jnp.int32)
+    w_eff = jnp.where(window > 0, window, t + 1)
+    qs = q.reshape(b, nchunk, qc, q.shape[2], q.shape[3]).transpose(1, 0, 2, 3, 4)
+
+    def chunk(ci, qchunk):
+        ti = ci * qc + jnp.arange(qc, dtype=jnp.int32)
+        rel = ti[:, None] - si[None, :]
+        mask = (rel >= 0) & (rel < w_eff) if causal else \
+            jnp.ones((qc, t), bool)
+        return _group_scores_to_out(qchunk, k, v, mask, cfg, tp)
+
+    outs = lax.map(lambda args: chunk(*args),
+                   (jnp.arange(nchunk), qs))              # [nc, B, qc, H*hd]
+    out = outs.transpose(1, 0, 2, 3).reshape(b, t, -1)
+    y = jnp.einsum("bth,hd->btd", out, p["wo"])
+    y = lax.psum(y, tp_axis)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(p, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                pos: jax.Array, cfg: ModelConfig, tp_axis: str, tp: int,
+                window) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One new token. x [B,1,d]; cache [B,S,KVl,hd]; pos [B] current length."""
+    b, s = cache_k.shape[0], cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, cfg, tp)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    bi = jnp.arange(b)
+    cache_k = cache_k.at[bi, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bi, pos].set(v[:, 0].astype(cache_v.dtype))
+    si = jnp.arange(s, dtype=jnp.int32)
+    w_eff = jnp.where(window > 0, window, s + 1)
+    mask = (si[None] <= pos[:, None]) & \
+        (pos[:, None] - si[None] < w_eff)                     # [B, S]
+    out = _group_scores_to_out(q, cache_k.astype(q.dtype),
+                               cache_v.astype(q.dtype),
+                               mask[:, None, :], cfg, tp)      # mask [B,1,S]
+    y = jnp.einsum("bth,hd->btd", out, p["wo"])
+    return lax.psum(y, tp_axis), cache_k, cache_v
+
+
+def attn_decode_splitkv(p, x: jax.Array, cache_k: jax.Array,
+                        cache_v: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                        tp_axis: str, tp: int, window, seq_axis: str,
+                        seq_shards: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-decoding over a sequence-sharded cache.
+
+    cache_k/v: [B, S_loc, KVl, hd] — this shard owns cache slots
+    [shard*S_loc, (shard+1)*S_loc).  The new token's KV is written by the
+    owning shard; softmax statistics combine across shards via psum/pmax.
+    """
+    b, s_loc = cache_k.shape[0], cache_k.shape[1]
+    shard = lax.axis_index(seq_axis)
+    q, k, v = _project_qkv(p, x, cfg, tp)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    # owner writes the new kv
+    loc = pos - shard * s_loc                                 # [B]
+    own = (loc >= 0) & (loc < s_loc)
+    safe = jnp.clip(loc, 0, s_loc - 1)
+    bi = jnp.arange(b)
+    newk = jnp.where(own[:, None, None],
+                     k[:, 0].astype(cache_k.dtype), cache_k[bi, safe])
+    newv = jnp.where(own[:, None, None],
+                     v[:, 0].astype(cache_v.dtype), cache_v[bi, safe])
+    cache_k = cache_k.at[bi, safe].set(newk)
+    cache_v = cache_v.at[bi, safe].set(newv)
+
+    hl, kvl, hd = cfg.heads_local(tp), cfg.kv_local(tp), cfg.hd
+    spos = shard * s_loc + jnp.arange(s_loc, dtype=jnp.int32)  # global slots
+    w_eff = jnp.where(window > 0, window, pos.max() + s_loc * seq_shards + 1)
+    mask = (spos[None] <= pos[:, None]) & \
+        (pos[:, None] - spos[None] < w_eff)                    # [B, S_loc]
+    qk_map = (jnp.arange(hl) * kvl) // hl
+    kk = jnp.take(cache_k.astype(q.dtype), qk_map, axis=2)     # [B,S,Hl,hd]
+    vv = jnp.take(cache_v.astype(q.dtype), qk_map, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q[:, 0], kk).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[:, None], scores, NEG)
+    m_loc = jnp.max(scores, axis=-1)                           # [B, Hl]
+    m = lax.pmax(m_loc, seq_axis)
+    z = jnp.exp(scores - m[..., None])
+    l = lax.psum(jnp.sum(z, axis=-1), seq_axis)                # [B, Hl]
+    o = lax.psum(jnp.einsum("bhs,bshd->bhd", z, vv.astype(jnp.float32)),
+                 seq_axis)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    y = jnp.einsum("bh,hd->bd", out.reshape(b, hl * hd), p["wo"])[:, None]
+    return lax.psum(y, tp_axis), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# 2D weight-stationary decode (serve2d): no FSDP weight gathers.
+# Weights stay sharded over (data=fsdp dim, model=tp dim); activations are
+# batch-replicated around each projection (KBs) instead of gathering weight
+# shards (100s of MBs per layer).  Decode-only: activation traffic ~0.
+# ---------------------------------------------------------------------------
+
+def _col_matmul_2d(x_full: jax.Array, w_local: jax.Array, dp_axes,
+                   dp_index: jax.Array) -> jax.Array:
+    """x_full [N, d] (replicated) @ w [d, out] sharded (d over data, out over
+    model) -> [N, out_local] replicated over data."""
+    dl = w_local.shape[0]
+    x_rows = lax.dynamic_slice_in_dim(x_full, dp_index * dl, dl, 1)
+    part = jnp.einsum("nd,dh->nh", x_rows, w_local)
+    for a in dp_axes:
+        part = lax.psum(part, a)
+    return part
+
+
+def _row_matmul_2d(h: jax.Array, w_local: jax.Array, tp_axis: str,
+                   dp_axes) -> jax.Array:
+    """h [N, in_local(model)] (replicated over data) @ w [in, d] sharded
+    (in over model, d over data) -> [N, d] fully replicated."""
+    part = jnp.einsum("nh,hd->nd", h, w_local)     # [N, d/dp]
+    part = lax.psum(part, tp_axis)
+    out = part
+    for a in dp_axes:
+        out = lax.all_gather(out, a, axis=1, tiled=True)
+    return out
+
+
+def _batch_replicate(x: jax.Array, dp_axes) -> jax.Array:
+    for a in dp_axes:
+        x = lax.all_gather(x, a, axis=0, tiled=True)
+    return x
+
+
+def _batch_slice(x: jax.Array, b_loc: int, dp_axes, mesh_sizes) -> jax.Array:
+    idx = jnp.zeros((), jnp.int32)
+    for a in dp_axes:
+        idx = idx * mesh_sizes[a] + lax.axis_index(a)
+    return lax.dynamic_slice_in_dim(x, idx * b_loc, b_loc, 0)
+
+
+def attn_decode_2d(p_local, x: jax.Array, cache_k: jax.Array,
+                   cache_v: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                   tp_axis: str, tp: int, window, dp_axes, mesh_sizes,
+                   seq_axis: Optional[str] = None, seq_shards: int = 1
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode token with 2D-sharded (ungathered) attention weights.
+
+    p_local: raw FSDP shards — wq/wk/wv [d/dp, out_local], wo [hl*hd, d/dp].
+    Batch-sharded cache mode (seq_axis=None): x [B_loc, 1, d] over data.
+    Seq-sharded mode (seq_axis set, long context): batch is replicated
+    (B_loc == B) and the cache holds S/seq_shards slots — projections stay
+    2D, the attention core is split-KV (psum'd softmax stats).
+    """
+    b_loc = x.shape[0]
+    batch_replicated = seq_axis is not None
+    dp_index = jnp.zeros((), jnp.int32)
+    for a in dp_axes:
+        dp_index = dp_index * mesh_sizes[a] + lax.axis_index(a)
+    xf = x[:, 0] if batch_replicated else _batch_replicate(x[:, 0], dp_axes)
+    hl, kvl, hd = cfg.heads_local(tp), cfg.kv_local(tp), cfg.hd
+    q = _col_matmul_2d(xf, p_local["wq"], dp_axes, dp_index)
+    k = _col_matmul_2d(xf, p_local["wk"], dp_axes, dp_index)
+    v = _col_matmul_2d(xf, p_local["wv"], dp_axes, dp_index)
+    if cfg.qkv_bias:
+        q = q + p_local["bq"]
+        k = k + p_local["bk"]
+        v = v + p_local["bv"]
+    if cfg.n_kv < tp:  # kv weights replicated-in-model: slice my head
+        idx = (lax.axis_index(tp_axis) * cfg.n_kv) // tp
+        k = lax.dynamic_slice_in_dim(k, idx * kvl * hd, kvl * hd, 1)
+        v = lax.dynamic_slice_in_dim(v, idx * kvl * hd, kvl * hd, 1)
+    if not batch_replicated:
+        q = _batch_slice(q, b_loc, dp_axes, mesh_sizes)
+        k = _batch_slice(k, b_loc, dp_axes, mesh_sizes)
+        v = _batch_slice(v, b_loc, dp_axes, mesh_sizes)
+    q = q.reshape(b_loc, 1, hl, hd)
+    k = k.reshape(b_loc, 1, kvl, hd)
+    v = v.reshape(b_loc, 1, kvl, hd)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+
+    if batch_replicated:
+        out, cache_k, cache_v = _splitkv_core(
+            q, k, v, cache_k, cache_v, pos, cfg, tp, window, seq_axis,
+            seq_shards)                                     # [B, hl*hd]
+        y_full = _row_matmul_2d(out, p_local["wo"], tp_axis, dp_axes)
+        return y_full[:, None], cache_k, cache_v
+
+    b, s = cache_k.shape[0], cache_k.shape[1]
+    bi = jnp.arange(b)
+    cache_k = cache_k.at[bi, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bi, pos].set(v[:, 0].astype(cache_v.dtype))
+    si = jnp.arange(s, dtype=jnp.int32)
+    w_eff = jnp.where(window > 0, window, s + 1)
+    mask = (si[None] <= pos[:, None]) & (pos[:, None] - si[None] < w_eff)
+    out = _group_scores_to_out(q, cache_k.astype(q.dtype),
+                               cache_v.astype(q.dtype), mask[:, None, :],
+                               cfg, tp)                     # [B_loc,1,hl*hd]
+    out_full = _batch_replicate(out[:, 0], dp_axes)         # [B, hl*hd]
+    y_full = _row_matmul_2d(out_full, p_local["wo"], tp_axis, dp_axes)
+    y = _batch_slice(y_full, b_loc, dp_axes, mesh_sizes)[:, None]
+    return y, cache_k, cache_v
+
+
+def _splitkv_core(q, k, v, cache_k, cache_v, pos, cfg: ModelConfig, tp: int,
+                  window, seq_axis: str, seq_shards: int):
+    """Split-KV attention core on projected q/k/v (shared by 2D decode)."""
+    b, s_loc = cache_k.shape[0], cache_k.shape[1]
+    hl, kvl, hd = cfg.heads_local(tp), cfg.kv_local(tp), cfg.hd
+    shard = lax.axis_index(seq_axis)
+    loc = pos - shard * s_loc
+    own = (loc >= 0) & (loc < s_loc)
+    safe = jnp.clip(loc, 0, s_loc - 1)
+    bi = jnp.arange(b)
+    newk = jnp.where(own[:, None, None], k[:, 0].astype(cache_k.dtype),
+                     cache_k[bi, safe])
+    newv = jnp.where(own[:, None, None], v[:, 0].astype(cache_v.dtype),
+                     cache_v[bi, safe])
+    cache_k = cache_k.at[bi, safe].set(newk)
+    cache_v = cache_v.at[bi, safe].set(newv)
+    spos = shard * s_loc + jnp.arange(s_loc, dtype=jnp.int32)
+    w_eff = jnp.where(window > 0, window, pos.max() + s_loc * seq_shards + 1)
+    mask = (spos[None] <= pos[:, None]) & (pos[:, None] - spos[None] < w_eff)
+    qk_map = (jnp.arange(hl) * kvl) // hl
+    kk = jnp.take(cache_k.astype(q.dtype), qk_map, axis=2)
+    vv = jnp.take(cache_v.astype(q.dtype), qk_map, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q[:, 0], kk).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[:, None], scores, NEG)
+    m_loc = jnp.max(scores, axis=-1)
+    m = lax.pmax(m_loc, seq_axis)
+    z = jnp.exp(scores - m[..., None])
+    l = lax.psum(jnp.sum(z, axis=-1), seq_axis)
+    o = lax.psum(jnp.einsum("bhs,bshd->bhd", z, vv.astype(jnp.float32)),
+                 seq_axis)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.reshape(b, hl * hd), cache_k, cache_v
+
+
+def ffn_2d(p_local, x: jax.Array, cfg: ModelConfig, tp_axis: str,
+           dp_axes, mesh_sizes, batch_replicated: bool = False) -> jax.Array:
+    """Dense FFN with 2D-sharded (ungathered) weights; x [B_loc, 1, d]."""
+    from .common import act_fn
+    b_loc = x.shape[0]
+    dp_index = jnp.zeros((), jnp.int32)
+    for a in dp_axes:
+        dp_index = dp_index * mesh_sizes[a] + lax.axis_index(a)
+    xf = x[:, 0] if batch_replicated else \
+        _batch_replicate(x[:, 0], dp_axes)                  # [B, d]
+    h = act_fn(_col_matmul_2d(xf, p_local["w1"], dp_axes, dp_index),
+               cfg.act) * _col_matmul_2d(xf, p_local["w3"], dp_axes, dp_index)
+    y_full = _row_matmul_2d(h, p_local["w2"], tp_axis, dp_axes)
+    if batch_replicated:
+        return y_full[:, None]
+    return _batch_slice(y_full, b_loc, dp_axes, mesh_sizes)[:, None]
+
+
+def cross_attn_params(key, cfg: ModelConfig, tp: int, dtype):
+    return attn_params(key, cfg, tp, dtype)
+
+
+def cross_attn(p, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array,
+               cfg: ModelConfig, tp_axis: str, tp: int) -> jax.Array:
+    """Decoder cross-attention vs precomputed encoder KV [B,S,KVl,hd]."""
+    b, t, _ = x.shape
+    hl, kvl, hd = cfg.heads_local(tp), cfg.kv_local(tp), cfg.hd
+    q = jnp.einsum("btd,dh->bth", x, p["wq"]).reshape(b, t, hl, hd)
+    s = enc_k.shape[1]
+    mask = jnp.ones((t, s), bool)
+    out = _group_scores_to_out(q, enc_k.astype(q.dtype), enc_v.astype(q.dtype),
+                               mask, cfg, tp)
+    y = jnp.einsum("bth,hd->btd", out, p["wo"])
+    return lax.psum(y, tp_axis)
+
+
+def encode_kv(p, enc_out: jax.Array, cfg: ModelConfig, tp: int):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    kvl, hd = cfg.kv_local(tp), cfg.hd
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(b, s, kvl, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(b, s, kvl, hd)
+    return k, v

@@ -1,0 +1,258 @@
+"""Model substrate: configs, init, norms, rope, sharded embedding/head.
+
+Every model in the zoo is built from a *period pattern* of blocks scanned
+over the depth (jax.lax.scan with stacked params + remat), and runs INSIDE
+shard_map with explicit tensor-parallel collectives over the "model" mesh
+axis — the framework owns its collective schedule (that is the paper's
+subject matter), nothing is delegated to GSPMD auto-sharding.
+
+Parallelism per device (mesh axes ("pod",) "data", "model"):
+  * batch over ("pod","data")          — data parallel
+  * attention heads / ffn hidden / vocab / experts over "model"
+  * optional FSDP: params + optimizer state sharded over the data axes,
+    all-gathered per scan step (transpose auto-derives reduce-scatter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # block pattern for ONE period; scanned n_layers/len(pattern) times.
+    # entries: "attn", "mamba", "mlstm", "slstm" each paired with an ffn kind
+    pattern: Tuple[str, ...] = ("attn",)
+    ffn_pattern: Tuple[str, ...] = ("dense",)   # dense | moe | moe+dense | none
+    # attention
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    window: int = 0                 # sliding window size; 0 = full
+    window_pattern: Tuple[int, ...] = ()  # per-period-layer window (0=full)
+    logit_softcap: float = 0.0
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    # ssm
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    # enc-dec / frontend stubs
+    enc_layers: int = 0             # >0 => encoder-decoder (audio)
+    enc_seq: int = 0                # encoder length (stub frame embeddings)
+    img_tokens: int = 0             # >0 => VLM stub patch embeddings
+    # numerics / distribution
+    dtype: Any = jnp.bfloat16
+    fsdp: bool = False
+    tie_embeddings: bool = True
+    act: str = "silu"               # silu (swiglu) | gelu
+    norm_eps: float = 1e-6
+    moe_capacity: float = 2.0       # dispatch capacity factor (perf knob)
+    remat_policy: str = "full"      # full | dots (save matmul outputs)
+    moe_token_shard: bool = True    # dedup replicated tokens across TP (SPerf H2)
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.n_layers} layers vs period {len(self.pattern)}"
+        return self.n_layers // len(self.pattern)
+
+    def heads_local(self, tp: int) -> int:
+        return max(1, -(-self.n_heads // tp))   # ceil; padded heads masked
+
+    def n_heads_padded(self, tp: int) -> int:
+        return self.heads_local(tp) * tp
+
+    def kv_local(self, tp: int) -> int:
+        return max(1, self.n_kv // tp)
+
+    def experts_local(self, tp: int) -> int:
+        return max(1, -(-self.n_experts // tp))
+
+    def n_experts_padded(self, tp: int) -> int:
+        return self.experts_local(tp) * tp
+
+    def reduced(self, **kw) -> "ModelConfig":
+        """Smoke-test variant: <=2 periods, small dims, <=4 experts."""
+        period = len(self.pattern)
+        small = dict(
+            n_layers=period, d_model=256, n_heads=4, n_kv=2,
+            d_ff=512, vocab=512, head_dim=64,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            expert_d_ff=128 if self.n_experts else 0,
+            enc_layers=1 if self.enc_layers else 0,
+            enc_seq=32 if self.enc_seq else 0,
+            img_tokens=8 if self.img_tokens else 0,
+            window=min(self.window, 16) if self.window else 0,
+            window_pattern=tuple(min(w, 16) for w in self.window_pattern),
+            dtype=jnp.float32, fsdp=False)
+        small.update(kw)
+        return dataclasses.replace(self, **small)
+
+    def param_count(self) -> float:
+        """Approximate total parameters (for 6ND roofline accounting)."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        per_layer = {}
+        attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv + hd * self.n_heads * d
+        dense_ffn = 3 * d * ff if self.act == "silu" else 2 * d * ff
+        moe_ffn = self.n_experts * 3 * d * self.expert_d_ff + d * self.n_experts \
+            if self.n_experts else 0
+        ssm_inner = 2 * d
+        mamba = d * ssm_inner * 2 + ssm_inner * (self.ssm_state * 2 + 2) \
+            + ssm_inner * d
+        total = 0.0
+        for blk, ffn in zip(self.pattern, self.ffn_pattern):
+            if blk == "attn":
+                total += attn
+            elif blk == "mamba":
+                total += mamba
+            elif blk in ("mlstm", "slstm"):
+                total += 4 * d * d  # qkv/io projections approx
+            if ffn == "dense":
+                total += dense_ffn
+            elif ffn == "moe":
+                total += moe_ffn
+            elif ffn == "moe+dense":
+                total += moe_ffn + dense_ffn
+        total *= self.n_periods
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.enc_layers:
+            total += self.enc_layers * (attn + dense_ffn)
+        return total
+
+    def active_param_count(self) -> float:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        moe_total = self.n_periods * sum(
+            self.n_experts * 3 * self.d_model * self.expert_d_ff
+            for f in self.ffn_pattern if f in ("moe", "moe+dense"))
+        moe_active = moe_total * self.top_k / self.n_experts
+        return full - moe_total + moe_active
+
+
+# ---------------------------------------------------------------------------
+# Elementwise pieces
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * scale) * (1.0 + g.astype(jnp.float32))).astype(x.dtype)
+
+
+def act_fn(x: jax.Array, kind: str) -> jax.Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., T, H, hd]; positions: [..., T] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding + LM head (run inside shard_map)
+# ---------------------------------------------------------------------------
+
+def embed(emb_local: jax.Array, ids: jax.Array, tp_axis: str) -> jax.Array:
+    """emb_local: [V_local, d] shard on tp_axis; ids global int32 [...]."""
+    v_local = emb_local.shape[0]
+    shard = lax.axis_index(tp_axis)
+    lo = shard * v_local
+    loc = ids - lo
+    ok = (loc >= 0) & (loc < v_local)
+    safe = jnp.clip(loc, 0, v_local - 1)
+    out = emb_local[safe] * ok[..., None].astype(emb_local.dtype)
+    return lax.psum(out, tp_axis)
+
+
+def lm_head_loss(x: jax.Array, head_local: jax.Array, labels: jax.Array,
+                 tp_axis: str, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Cross-entropy with vocab-sharded logits.
+
+    x: [B, T, d]; head_local: [d, V_local]; labels: [B, T] global ids.
+    Stable softmax via psum(max) / psum(sumexp) over the tp axis.
+    """
+    logits = jnp.einsum("btd,dv->btv", x.astype(jnp.float32),
+                        head_local.astype(jnp.float32))
+    v_local = head_local.shape[1]
+    shard = lax.axis_index(tp_axis)
+    lo = shard * v_local
+    # stop_gradient: the stabilizer contributes zero gradient and pmax has
+    # no differentiation rule
+    gmax = lax.pmax(jnp.max(lax.stop_gradient(logits), axis=-1),
+                    tp_axis)                                      # [B, T]
+    z = jnp.exp(logits - gmax[..., None])
+    denom = lax.psum(jnp.sum(z, axis=-1), tp_axis)                # [B, T]
+    loc = labels - lo
+    ok = (loc >= 0) & (loc < v_local)
+    safe = jnp.clip(loc, 0, v_local - 1)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    picked = lax.psum(jnp.where(ok, picked - gmax, 0.0), tp_axis)
+    nll = jnp.log(denom) - picked
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_head_logits(x: jax.Array, head_local: jax.Array) -> jax.Array:
+    """Local logits shard [B, T, V_local] (serving keeps them sharded)."""
+    return jnp.einsum("btd,dv->btv", x.astype(jnp.float32),
+                      head_local.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[scale_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(fan_in)).astype(dtype)
+
+
+class KeyGen:
+    def __init__(self, seed: int):
+        self.key = jax.random.PRNGKey(seed)
+
+    def __call__(self):
+        self.key, k = jax.random.split(self.key)
+        return k

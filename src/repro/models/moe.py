@@ -1,0 +1,138 @@
+"""Expert-parallel MoE with sort-based all_to_all dispatch.
+
+Experts are sharded over the "model" mesh axis (arctic: 128/16 = 8 per
+device).  Token→expert dispatch is *the* power-law sparse exchange of the
+assigned MoE archs, and structurally identical to one layer of the paper's
+butterfly: bucket tokens by destination range (here: expert-owning device),
+exchange fixed-capacity buckets with ``all_to_all``, locally group + compute,
+and return along the same route (nested, like the paper's up phase).
+
+Static capacities with counted drops (same contract as the sparse allreduce
+and every production MoE).  Router params are replicated across "model";
+padded experts (when E % tp != 0) are masked to -inf in the router.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, act_fn, dense_init
+
+
+def moe_params(key, cfg: ModelConfig, tp: int, dtype):
+    el, d, ff = cfg.experts_local(tp), cfg.d_model, cfg.expert_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, cfg.n_experts_padded(tp)),
+                             dtype=jnp.float32),
+        "w1": dense_init(ks[1], (el, d, ff), scale_axis=1, dtype=dtype),
+        "w3": dense_init(ks[2], (el, d, ff), scale_axis=1, dtype=dtype),
+        "w2": dense_init(ks[3], (el, ff, d), scale_axis=1, dtype=dtype),
+    }
+
+
+def _group_by(dest: jax.Array, num_groups: int, cap: int):
+    """Slot assignment: entry i -> (dest_i, rank of i within dest_i).
+
+    Returns (slot flat index into [num_groups*cap] with overflow parked at
+    num_groups*cap, keep mask).  Stable: earlier tokens win capacity.
+    """
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = dest[order]
+    # position within group = index - first index of that group
+    first = jnp.searchsorted(sorted_dest, jnp.arange(num_groups))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - first[sorted_dest]
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, dest * cap + pos, num_groups * cap)
+    return slot, keep
+
+
+def moe_ffn(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str, tp: int,
+            capacity_factor: float = 2.0, token_shard: bool = True
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [B, T, d] -> (y [B, T, d], aux_loss, dropped_fraction).
+
+    token_shard=True (default): activations entering the MoE are replicated
+    across the model axis (post-psum), so WITHOUT sharding every TP rank
+    would route and dispatch the SAME tokens — 16x redundant expert compute
+    and all_to_all traffic (found via the SPerf H2 roofline: jamba/arctic
+    useful-compute ratio ~0.04).  Each rank handles its 1/tp token slice and
+    the results are all_gathered at the end.
+    """
+    b, t, d = x.shape
+    n_full = b * t
+    el = cfg.experts_local(tp)
+    e_pad = cfg.n_experts_padded(tp)
+    k_top = cfg.top_k
+    xf = x.reshape(n_full, d)
+    if token_shard and tp > 1:
+        n = -(-n_full // tp)                     # padded slice length
+        pad = n * tp - n_full
+        xp = jnp.pad(xf, ((0, pad), (0, 0)))
+        shard = lax.axis_index(tp_axis)
+        xf = lax.dynamic_slice_in_dim(xp, shard * n, n, 0)
+    else:
+        n = n_full
+
+    # ---- route -------------------------------------------------------------
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    logits = jnp.where(jnp.arange(e_pad) < cfg.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, ek = lax.top_k(probs, k_top)                       # [N, K]
+    wk = wk / jnp.maximum(jnp.sum(wk, axis=-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ek[:, 0], e_pad), axis=0)
+    aux = jnp.sum(me * ce) * cfg.n_experts
+
+    # ---- dispatch: bucket by owning device, all_to_all ----------------------
+    flat_e = ek.reshape(n * k_top)                          # global expert id
+    dest_dev = flat_e // el
+    cap_dev = int(max(8, -(-n * k_top // tp) * capacity_factor))
+    slot, keep = _group_by(dest_dev, tp, cap_dev)
+    xk = jnp.repeat(xf, k_top, axis=0)                      # [N*K, d]
+    buf = jnp.zeros((tp * cap_dev + 1, d), x.dtype).at[slot].set(
+        jnp.where(keep[:, None], xk, 0))[:-1].reshape(tp, cap_dev, d)
+    ebuf = jnp.full((tp * cap_dev + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(keep, flat_e % el, -1))[:-1].reshape(tp, cap_dev)
+
+    g = None  # full-axis all_to_all over the model axis
+    rbuf = lax.all_to_all(buf, tp_axis, split_axis=0, concat_axis=0)
+    rebuf = lax.all_to_all(ebuf, tp_axis, split_axis=0, concat_axis=0)
+
+    # ---- local expert compute: group received tokens by local expert --------
+    rx = rbuf.reshape(tp * cap_dev, d)
+    re = rebuf.reshape(tp * cap_dev)
+    # never more slots than tokens actually received (el=1 => exact)
+    cap_e = int(min(max(8, -(-tp * cap_dev // el) * 1.25), tp * cap_dev))
+    eslot, ekeep = _group_by(jnp.where(re >= 0, re, el), el, cap_e)
+    ex = jnp.zeros((el * cap_e + 1, d), x.dtype).at[eslot].set(
+        jnp.where((ekeep & (re >= 0))[:, None], rx, 0))[:-1]
+    ex = ex.reshape(el, cap_e, d)
+    h = jnp.einsum("ecd,edf->ecf", ex, p["w1"])
+    h = act_fn(h, cfg.act) * jnp.einsum("ecd,edf->ecf", ex, p["w3"])
+    ey = jnp.einsum("ecf,efd->ecd", h, p["w2"])             # [el, cap_e, d]
+    # back to received-slot order
+    ry = ey.reshape(el * cap_e, d)
+    safe_es = jnp.minimum(eslot, el * cap_e - 1)
+    y_slots = ry[safe_es] * (ekeep & (re >= 0))[:, None]
+    y_slots = y_slots.reshape(tp, cap_dev, d)
+
+    # ---- return route (all_to_all is its own inverse layout) ---------------
+    back = lax.all_to_all(y_slots, tp_axis, split_axis=0, concat_axis=0)
+    backf = back.reshape(tp * cap_dev, d)
+
+    # ---- combine ------------------------------------------------------------
+    safe_slot = jnp.minimum(slot, tp * cap_dev - 1)
+    per_assign = backf[safe_slot] * keep[:, None]           # [N*K, d]
+    y = jnp.sum(per_assign.reshape(n, k_top, d)
+                * wk[..., None].astype(x.dtype), axis=1)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    if token_shard and tp > 1:
+        y = lax.all_gather(y, tp_axis, axis=0, tiled=True)[:n_full]
+    return y.reshape(b, t, d), aux.astype(jnp.float32), dropped

@@ -1,0 +1,163 @@
+"""2D weight-stationary decode for MoE and Mamba blocks (SPerf H4 cont.).
+
+Same principle as attention.attn_decode_2d: decode is weight-bound, so the
+FSDP shards are consumed in place — each (data, model) device contributes
+the partial product of its d-row slice, summed with a psum over data —
+instead of all-gathering 100s of MB of weights per layer per token.
+
+MoE specifics: the router logits are psum'd (identical on every rank, so
+top-k routing is deterministic); dispatch all_to_all carries d/dp token
+SLICES (each data rank ships its slice of the same tokens), so dispatch
+bytes also drop by dp.
+
+Used for decode only; training keeps the gather/transpose path (grads need
+the reduce-scatter the gather transpose provides).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (_batch_replicate, _batch_slice, _col_matmul_2d,
+                        _row_matmul_2d)
+from .common import ModelConfig, act_fn
+from .moe import _group_by
+
+
+def _dp_index(dp_axes, mesh_sizes):
+    idx = jnp.zeros((), jnp.int32)
+    for a in dp_axes:
+        idx = idx * mesh_sizes[a] + lax.axis_index(a)
+    return idx
+
+
+def moe_ffn_2d(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str,
+               tp: int, dp_axes, mesh_sizes,
+               batch_replicated: bool = False) -> jax.Array:
+    """MoE with 2D-sharded expert weights; x [B_loc, 1, d] (decode).
+
+    p: raw shards — router [d/dp, E], w1/w3 [el, d/dp, eff],
+    w2 [el, eff, d/dp].
+    """
+    b_loc, _, d = x.shape
+    el = cfg.experts_local(tp)
+    e_pad = cfg.n_experts_padded(tp)
+    k_top = cfg.top_k
+    dpi = _dp_index(dp_axes, mesh_sizes)
+    dl = p["router"].shape[0]                       # d/dp
+
+    xf = x[:, 0] if batch_replicated else _batch_replicate(x[:, 0], dp_axes)
+    n_full = xf.shape[0]
+
+    # ---- route (replicated logits => identical top-k on every rank) -------
+    logits = _col_matmul_2d(xf.astype(jnp.float32),
+                            p["router"].astype(jnp.float32), dp_axes, dpi)
+    logits = jnp.where(jnp.arange(e_pad) < cfg.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, ek = lax.top_k(probs, k_top)
+    wk = wk / jnp.maximum(jnp.sum(wk, axis=-1, keepdims=True), 1e-9)
+
+    # ---- token-shard over tp, dispatch d/dp slices -------------------------
+    n = -(-n_full // tp)
+    pad = n * tp - n_full
+    x_rows = lax.dynamic_slice_in_dim(xf, dpi * dl, dl, 1)   # [N, d/dp]
+    xp = jnp.pad(x_rows, ((0, pad), (0, 0)))
+    ekp = jnp.pad(ek, ((0, pad), (0, 0)), constant_values=0)
+    wkp = jnp.pad(wk, ((0, pad), (0, 0)))
+    shard = lax.axis_index(tp_axis)
+    xs = lax.dynamic_slice_in_dim(xp, shard * n, n, 0)       # [n, d/dp]
+    es = lax.dynamic_slice_in_dim(ekp, shard * n, n, 0)      # [n, K]
+    ws = lax.dynamic_slice_in_dim(wkp, shard * n, n, 0)
+
+    flat_e = es.reshape(n * k_top)
+    dest = flat_e // el
+    cap = int(max(8, -(-n * k_top // tp) * cfg.moe_capacity))
+    slot, keep = _group_by(dest, tp, cap)
+    xk = jnp.repeat(xs, k_top, axis=0)
+    buf = jnp.zeros((tp * cap + 1, dl), x.dtype).at[slot].set(
+        jnp.where(keep[:, None], xk, 0))[:-1].reshape(tp, cap, dl)
+    ebuf = jnp.full((tp * cap + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(keep, flat_e % el, -1))[:-1].reshape(tp, cap)
+    rbuf = lax.all_to_all(buf, tp_axis, split_axis=0, concat_axis=0)
+    rebuf = lax.all_to_all(ebuf, tp_axis, split_axis=0, concat_axis=0)
+
+    # ---- expert compute on d/dp slices + psum over data --------------------
+    rx = rbuf.reshape(tp * cap, dl)
+    re = rebuf.reshape(tp * cap)
+    cap_e = int(min(max(8, -(-tp * cap // el) * 1.25), tp * cap))
+    eslot, ekeep = _group_by(jnp.where(re >= 0, re, el), el, cap_e)
+    exs = jnp.zeros((el * cap_e + 1, dl), x.dtype).at[eslot].set(
+        jnp.where((ekeep & (re >= 0))[:, None], rx, 0))[:-1]
+    exs = exs.reshape(el, cap_e, dl)
+    h = jnp.einsum("ecd,edf->ecf", exs, p["w1"])
+    h3 = jnp.einsum("ecd,edf->ecf", exs, p["w3"])
+    for a in dp_axes:
+        h = lax.psum(h, a)
+        h3 = lax.psum(h3, a)
+    h = act_fn(h, cfg.act) * h3
+    ey = jnp.einsum("ecf,efd->ecd", h, p["w2"])              # [el, cap_e, d/dp]
+    ry = ey.reshape(el * cap_e, dl)
+    safe_es = jnp.minimum(eslot, el * cap_e - 1)
+    y_slots = (ry[safe_es] * (ekeep & (re >= 0))[:, None]).reshape(tp, cap, dl)
+
+    # ---- return + combine ---------------------------------------------------
+    back = lax.all_to_all(y_slots, tp_axis, split_axis=0, concat_axis=0)
+    backf = back.reshape(tp * cap, dl)
+    safe_slot = jnp.minimum(slot, tp * cap - 1)
+    per_assign = backf[safe_slot] * keep[:, None]
+    y = jnp.sum(per_assign.reshape(n, k_top, dl)
+                * ws[..., None].astype(x.dtype), axis=1)     # [n, d/dp]
+    # reassemble: tokens over model, d over data
+    y = lax.all_gather(y, tp_axis, axis=0, tiled=True)[:n_full]  # [N, d/dp]
+    for a in dp_axes:
+        y = lax.all_gather(y, a, axis=1, tiled=True)         # [N, d]
+    if not batch_replicated:
+        y = _batch_slice(y, b_loc, dp_axes, mesh_sizes)
+    return y[:, None]
+
+
+def mamba_decode_2d(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig,
+                    tp_axis: str, tp: int, dp_axes, mesh_sizes,
+                    batch_replicated: bool = False
+                    ) -> Tuple[jax.Array, Dict]:
+    """Mamba decode with 2D-sharded weights; x [B_loc, 1, d].
+
+    in_x/in_z/w_dt [d/dp, dil_local], w_B/w_C [d/dp, n], out [dil_local, d/dp],
+    conv [K, dil_local], A_log [dil_local, n], D [dil_local] (model-sharded,
+    usable directly).  State stays batch-sharded ([B_loc, dil_local, n]).
+    """
+    b_loc = x.shape[0]
+    dpi = _dp_index(dp_axes, mesh_sizes)
+    xf = x[:, 0] if batch_replicated else _batch_replicate(x[:, 0], dp_axes)
+
+    xi = _col_matmul_2d(xf, p["in_x"], dp_axes, dpi)         # [B, dil_l]
+    z = _col_matmul_2d(xf, p["in_z"], dp_axes, dpi)
+    dt = jax.nn.softplus(
+        _col_matmul_2d(xf, p["w_dt"], dp_axes, dpi).astype(jnp.float32))
+    Bm = _col_matmul_2d(xf, p["w_B"], dp_axes, dpi).astype(jnp.float32)
+    Cm = _col_matmul_2d(xf, p["w_C"], dp_axes, dpi).astype(jnp.float32)
+    if not batch_replicated:
+        xi = _batch_slice(xi, b_loc, dp_axes, mesh_sizes)
+        z = _batch_slice(z, b_loc, dp_axes, mesh_sizes)
+        dt = _batch_slice(dt, b_loc, dp_axes, mesh_sizes)
+        Bm = _batch_slice(Bm, b_loc, dp_axes, mesh_sizes)
+        Cm = _batch_slice(Cm, b_loc, dp_axes, mesh_sizes)
+
+    hist = jnp.concatenate([state["conv"], xi[:, None]], axis=1)
+    xi = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv"]))
+    new_conv = hist[:, 1:]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)
+    h = state["h"] * a + (dt * xi.astype(jnp.float32))[..., None] \
+        * Bm[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, Cm).astype(x.dtype) \
+        + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)                                   # [B_loc, dil_l]
+    yf = y if batch_replicated else _batch_replicate(y, dp_axes)
+    out_full = _row_matmul_2d(yf, p["out"], tp_axis, dp_axes)  # [B, d]
+    out = out_full if batch_replicated else \
+        _batch_slice(out_full, b_loc, dp_axes, mesh_sizes)
+    return out[:, None], {"h": h, "conv": new_conv}

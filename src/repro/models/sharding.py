@@ -1,0 +1,202 @@
+"""Partition-spec trees for every block kind.
+
+Each entry is a tuple over the leaf's dims (excluding the leading
+period-stack dim, added by ``stacked``): "model" (TP axis), "fsdp"
+(sharded over the data axes when cfg.fsdp, gathered per scan step inside
+the body), or None (replicated).
+
+These trees drive (a) pjit in/out_shardings at the launcher and (b) the
+per-period all_gathers inside the shard_map body — one source of truth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .common import ModelConfig
+
+Tree = Dict[str, Any]
+
+
+def attn_spec(cfg: ModelConfig, tp: int) -> Tree:
+    kv_sh = cfg.n_kv >= tp   # else kv weights replicated, sliced per device
+    s = {
+        "wq": ("fsdp", "model"),
+        "wk": ("fsdp", "model" if kv_sh else None),
+        "wv": ("fsdp", "model" if kv_sh else None),
+        "wo": ("model", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ("model",)
+        s["bk"] = ("model" if kv_sh else None,)
+        s["bv"] = ("model" if kv_sh else None,)
+    return s
+
+
+def ffn_spec(cfg: ModelConfig, tp: int) -> Tree:
+    return {"w1": ("fsdp", "model"), "w3": ("fsdp", "model"),
+            "w2": ("model", "fsdp")}
+
+
+def moe_spec(cfg: ModelConfig, tp: int) -> Tree:
+    return {"router": ("fsdp", None),
+            "w1": ("model", "fsdp", None),
+            "w3": ("model", "fsdp", None),
+            "w2": ("model", None, "fsdp")}
+
+
+def mamba_spec(cfg: ModelConfig, tp: int) -> Tree:
+    return {"in_x": ("fsdp", "model"), "in_z": ("fsdp", "model"),
+            "conv": (None, "model"), "w_dt": ("fsdp", "model"),
+            "w_B": ("fsdp", None), "w_C": ("fsdp", None),
+            "A_log": ("model", None), "D": ("model",),
+            "out": ("model", "fsdp")}
+
+
+def mlstm_spec(cfg: ModelConfig, tp: int) -> Tree:
+    return {"wq": ("fsdp", None), "wk": ("fsdp", None),
+            "wv": ("fsdp", "model"), "wi": ("fsdp", None),
+            "wf": ("fsdp", None), "out": ("model", "fsdp")}
+
+
+def slstm_spec(cfg: ModelConfig, tp: int) -> Tree:
+    # sequential block: replicated across model (see ssm.py docstring)
+    return {"wx": ("fsdp", None), "wr": (None, None, None),
+            "out": ("fsdp", None), "bias": (None,)}
+
+
+BLOCK_SPECS = {"attn": attn_spec, "mamba": mamba_spec,
+               "mlstm": mlstm_spec, "slstm": slstm_spec}
+FFN_SPECS = {"dense": ffn_spec, "moe": moe_spec}
+
+
+def period_spec(cfg: ModelConfig, tp: int) -> Tree:
+    out: Tree = {}
+    for j, (blk, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+        e: Tree = {"ln1": (None,), blk: BLOCK_SPECS[blk](cfg, tp)}
+        if ffn != "none":
+            e["ln2"] = (None,)
+        if ffn in ("dense", "moe+dense"):
+            e["ffn"] = ffn_spec(cfg, tp)
+        if ffn in ("moe", "moe+dense"):
+            e["moe"] = moe_spec(cfg, tp)
+        out[f"b{j}"] = e
+    return out
+
+
+def model_spec(cfg: ModelConfig, tp: int) -> Tree:
+    s: Tree = {"emb": ("model", None), "final_ln": (None,),
+               "blocks": period_spec(cfg, tp)}
+    if not cfg.tie_embeddings:
+        s["head"] = (None, "model")
+    if cfg.enc_layers:
+        enc = {}
+        for j in range(1):
+            enc["b0"] = {"ln1": (None,), "attn": attn_spec(cfg, tp),
+                         "ln2": (None,), "ffn": ffn_spec(cfg, tp)}
+        s["enc_blocks"] = enc
+        s["enc_ln"] = (None,)
+        s["cross"] = attn_spec(cfg, tp)  # per-period cross-attn (decoder)
+        s["ln_cross"] = (None,)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Spec-tree -> PartitionSpec / gather helpers
+# ---------------------------------------------------------------------------
+
+def to_pspec(tree: Tree, fsdp_axes: Optional[Tuple[str, ...]],
+             stacked: bool = False):
+    """Spec-tuple tree -> jax PartitionSpec tree.
+
+    stacked=True prepends the period dim (None).  fsdp_axes=None (or cfg not
+    fsdp) turns "fsdp" entries into replication.
+    """
+    def conv(t):
+        if isinstance(t, dict):
+            return {k: conv(v) for k, v in t.items()}
+        dims = []
+        for d in t:
+            if d == "fsdp":
+                dims.append(fsdp_axes if fsdp_axes else None)
+            else:
+                dims.append(d)
+        if stacked:
+            dims = [None] + dims
+        return P(*dims)
+    return conv(tree)
+
+
+def full_model_pspec(cfg: ModelConfig, tp: int,
+                     fsdp_axes: Optional[Tuple[str, ...]]):
+    """PartitionSpec tree for the full model param pytree (init_params)."""
+    spec = model_spec(cfg, tp)
+    fa = fsdp_axes if cfg.fsdp else None
+    out = {"emb": to_pspec(spec["emb"], fa),
+           "final_ln": to_pspec(spec["final_ln"], fa),
+           "blocks": to_pspec(spec["blocks"], fa, stacked=True)}
+    if "head" in spec:
+        out["head"] = to_pspec(spec["head"], fa)
+    if cfg.enc_layers:
+        out["enc_blocks"] = to_pspec(spec["enc_blocks"], fa, stacked=True)
+        out["enc_ln"] = to_pspec(spec["enc_ln"], fa)
+        out["cross"] = to_pspec(spec["cross"], fa, stacked=True)
+        out["ln_cross"] = to_pspec(spec["ln_cross"], fa)
+    return out
+
+
+def full_model_spec_tuples(cfg: ModelConfig, tp: int):
+    """Raw spec-tuple tree (prepended period dim) mirroring init_params —
+    used by grad sync to classify leaves (fsdp vs replicated)."""
+    spec = model_spec(cfg, tp)
+
+    def stack(t):
+        if isinstance(t, dict):
+            return {k: stack(v) for k, v in t.items()}
+        return (None,) + tuple(t)
+
+    out = {"emb": tuple(spec["emb"]), "final_ln": tuple(spec["final_ln"]),
+           "blocks": stack(spec["blocks"])}
+    if "head" in spec:
+        out["head"] = tuple(spec["head"])
+    if cfg.enc_layers:
+        out["enc_blocks"] = stack(spec["enc_blocks"])
+        out["enc_ln"] = tuple(spec["enc_ln"])
+        out["cross"] = stack(spec["cross"])
+        out["ln_cross"] = tuple(spec["ln_cross"])
+    return out
+
+
+def fsdp_gather(params: Tree, spec: Tree, fsdp_axes: Tuple[str, ...]):
+    """Inside shard_map: all_gather every "fsdp" dim (transpose derives the
+    reduce-scatter on the backward pass — that IS the FSDP grad sync)."""
+    def g(p, s):
+        if isinstance(s, dict):
+            return {k: g(p[k], s[k]) for k in s}
+        x = p
+        for i, d in enumerate(s):
+            if d == "fsdp":
+                for ax in fsdp_axes:
+                    x = lax.all_gather(x, ax, axis=i, tiled=True)
+        return x
+    return g(params, spec)
+
+
+def is_fsdp_leaf(spec_leaf) -> bool:
+    return any(d == "fsdp" for d in spec_leaf)
+
+
+def flat_spec_leaves(tree: Tree):
+    out = []
+
+    def walk(t, path):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, path + (k,))
+        else:
+            out.append((path, t))
+    walk(tree, ())
+    return out

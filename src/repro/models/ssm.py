@@ -1,0 +1,398 @@
+"""SSM blocks: Mamba (jamba hybrid) and xLSTM (mLSTM / sLSTM).
+
+TPU adaptations (recorded in DESIGN.md):
+  * Mamba's selective scan uses ``lax.associative_scan`` over time on the
+    diagonal recurrence h_t = a_t h_{t-1} + b_t (parallel prefix — the GPU
+    kernel's work-efficient scan maps directly onto this).
+  * mLSTM uses the *chunkwise* linear-attention form: quadratic attention
+    within chunks of ``CHUNK`` tokens, a tiny recurrent state
+    [B, H, dk, dv_local] carried across chunks by lax.scan — this is the
+    standard TPU/MXU formulation (matmul-rich, O(T·c) memory instead of the
+    O(T·dk·dv) a naive scan would materialize).
+  * sLSTM has true recurrence (R·h_{t-1} inside the gates) and cannot be
+    parallelized over time; it runs as lax.scan over steps, *replicated*
+    across the model axis (its FLOPs share in xlstm-1.3b is 1/8 of layers;
+    TP would insert a psum per step for no win — noted as non-transferable
+    parallelism).
+
+Sharding: mamba inner channels and mLSTM value-dim shard over "model";
+q/k and gates are computed from replicated weights.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, dense_init
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def mamba_inner(cfg: ModelConfig, tp: int) -> int:
+    di = 2 * cfg.d_model
+    return max(8, di // tp)
+
+
+def mamba_params(key, cfg: ModelConfig, tp: int, dtype):
+    d, n = cfg.d_model, cfg.ssm_state
+    dil = mamba_inner(cfg, tp)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_x": dense_init(ks[0], (d, dil), dtype=dtype),
+        "in_z": dense_init(ks[1], (d, dil), dtype=dtype),
+        "conv": dense_init(ks[2], (cfg.ssm_conv, dil), dtype=dtype),
+        "w_dt": dense_init(ks[3], (d, dil), dtype=dtype),
+        "w_B": dense_init(ks[4], (d, n), dtype=dtype),
+        "w_C": dense_init(ks[5], (d, n), dtype=dtype),
+        "A_log": jnp.zeros((dil, n), jnp.float32),
+        "D": jnp.ones((dil,), jnp.float32),
+        "out": dense_init(ks[6], (dil, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [B,T,C], w [K,C]: depthwise causal conv via shifted adds."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+SCAN_CHUNK = 256
+
+
+def _chunked_selective_scan(dt: jax.Array, xi: jax.Array, Bm: jax.Array,
+                            Cm: jax.Array, A: jax.Array):
+    """y_t = C_t . h_t,  h_t = exp(dt_t A) h_{t-1} + (dt_t xi_t) B_t —
+    chunked + fully fused.
+
+    dt, xi: [B,T,dil] f32; Bm, Cm: [B,T,n] f32; A: [dil,n].  The [*,dil,n]
+    gate/state tensors exist per chunk of SCAN_CHUNK steps only — neither
+    the gates nor h ever materialize full-sequence (measured ~8 GB/layer
+    saved).  Returns (y [B,T,dil], final state h [B,dil,n]).
+    """
+    bsz, t, dil = dt.shape
+    n = Bm.shape[-1]
+    ck = min(SCAN_CHUNK, t)
+    nc = t // ck
+    assert t % ck == 0
+
+    def chunked(x):
+        return x.reshape((bsz, nc, ck) + x.shape[2:]).swapaxes(0, 1)
+
+    def comb(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def chunk_step(carry, inp):
+        dt_c, xi_c, b_c, c_c = inp                # [B,ck,dil] / [B,ck,n]
+        a_c = jnp.exp(dt_c[..., None] * A)        # [B,ck,dil,n]
+        bt_c = (dt_c * xi_c)[..., None] * b_c[:, :, None, :]
+        acum, hin = lax.associative_scan(comb, (a_c, bt_c), axis=1)
+        h = hin + acum * carry[:, None]
+        y_c = jnp.einsum("bkcn,bkn->bkc", h, c_c)  # C-contraction fused too
+        return h[:, -1], y_c
+
+    h0 = jnp.zeros((bsz, dil, n), jnp.float32)
+    h_fin, ys = lax.scan(chunk_step, h0,
+                         (chunked(dt), chunked(xi), chunked(Bm), chunked(Cm)))
+    return ys.swapaxes(0, 1).reshape(bsz, t, dil), h_fin
+
+
+def _chunked_linear_scan(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over axis 1, chunked (mamba2-style).
+
+    Within a chunk of SCAN_CHUNK steps: parallel associative scan; across
+    chunks: a tiny sequential lax.scan carrying [B, dil, n] state.  Peak
+    memory O(B * chunk * dil * n) instead of O(B * T * dil * n * log T).
+    """
+    bsz, t = a.shape[0], a.shape[1]
+    ck = min(SCAN_CHUNK, t)
+    nc = t // ck
+    assert t % ck == 0, f"seq {t} % chunk {ck}"
+    ar = a.reshape((bsz, nc, ck) + a.shape[2:]).transpose(1, 0, 2, 3, 4)
+    br = b.reshape((bsz, nc, ck) + b.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    def comb(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def chunk_step(carry, inp):
+        ac, bc = inp                                   # [B, ck, dil, n]
+        acum, hin = lax.associative_scan(comb, (ac, bc), axis=1)
+        h = hin + acum * carry[:, None]
+        return h[:, -1], h
+
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], a.dtype)
+    _, hs = lax.scan(chunk_step, h0, (ar, br))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(a.shape)
+
+
+def mamba_train(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str,
+                tp: int, return_state: bool = False):
+    b, t, d = x.shape
+    n = cfg.ssm_state
+    xi_pre = jnp.einsum("btd,dc->btc", x, p["in_x"])      # [B,T,dil]
+    z = jnp.einsum("btd,dc->btc", x, p["in_z"])
+    xi = jax.nn.silu(_causal_conv(xi_pre, p["conv"]))
+    dt = jax.nn.softplus(jnp.einsum("btd,dc->btc", x, p["w_dt"])
+                         .astype(jnp.float32))            # [B,T,dil]
+    Bm = jnp.einsum("btd,dn->btn", x, p["w_B"]).astype(jnp.float32)
+    Cm = jnp.einsum("btd,dn->btn", x, p["w_C"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                              # [dil, n]
+    ys, h_fin = _chunked_selective_scan(dt, xi.astype(jnp.float32), Bm, Cm, A)
+    y = ys.astype(x.dtype) + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("btc,cd->btd", y, p["out"])
+    out = lax.psum(out, tp_axis)
+    if return_state:
+        kconv = p["conv"].shape[0]
+        state = {"h": h_fin, "conv": xi_pre[:, t - (kconv - 1):]}
+        return out, state
+    return out
+
+
+def mamba_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig,
+                 tp_axis: str, tp: int) -> Tuple[jax.Array, Dict]:
+    """x [B,1,d]; state: {"h": [B,dil,n], "conv": [B,K-1,dil]}."""
+    b = x.shape[0]
+    n = cfg.ssm_state
+    xi = jnp.einsum("btd,dc->btc", x, p["in_x"])[:, 0]    # [B,dil]
+    z = jnp.einsum("btd,dc->btc", x, p["in_z"])[:, 0]
+    k = p["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # [B,K,dil]
+    xi = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv"]))
+    new_conv = hist[:, 1:]
+    dt = jax.nn.softplus(jnp.einsum("btd,dc->btc", x, p["w_dt"])
+                         .astype(jnp.float32))[:, 0]      # [B,dil]
+    Bm = jnp.einsum("btd,dn->btn", x, p["w_B"]).astype(jnp.float32)[:, 0]
+    Cm = jnp.einsum("btd,dn->btn", x, p["w_C"]).astype(jnp.float32)[:, 0]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                        # [B,dil,n]
+    h = state["h"] * a + (dt * xi.astype(jnp.float32))[..., None] \
+        * Bm[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, Cm).astype(x.dtype) \
+        + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bc,cd->bd", y, p["out"])[:, None]
+    return lax.psum(out, tp_axis), {"h": h, "conv": new_conv}
+
+
+def mamba_init_state(b: int, cfg: ModelConfig, tp: int, dtype):
+    dil = mamba_inner(cfg, tp)
+    return {"h": jnp.zeros((b, dil, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((b, cfg.ssm_conv - 1, dil), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunkwise parallel linear attention with exp gating)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig, tp: int) -> Tuple[int, int, int]:
+    h = cfg.n_heads
+    dk = cfg.d_model // h
+    dvl = max(1, dk // tp)          # value dim sharded over model axis
+    return h, dk, dvl
+
+
+def mlstm_params(key, cfg: ModelConfig, tp: int, dtype):
+    h, dk, dvl = mlstm_dims(cfg, tp)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * dk), dtype=dtype),
+        "wk": dense_init(ks[1], (d, h * dk), dtype=dtype),
+        "wv": dense_init(ks[2], (d, h * dvl), dtype=dtype),
+        "wi": dense_init(ks[3], (d, h), dtype=jnp.float32),
+        "wf": dense_init(ks[4], (d, h), dtype=jnp.float32),
+        "out": dense_init(ks[5], (h * dvl, d), dtype=dtype),
+    }
+
+
+def mlstm_train(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str,
+                tp: int, return_state: bool = False):
+    b, t, d = x.shape
+    h, dk, dvl = mlstm_dims(cfg, tp)
+    c = min(CHUNK, t)
+    nc = t // c
+    assert t % c == 0, f"seq {t} not divisible by chunk {c}"
+    q = jnp.einsum("btd,dh->bth", x, p["wq"]).reshape(b, nc, c, h, dk)
+    k = jnp.einsum("btd,dh->bth", x, p["wk"]).reshape(b, nc, c, h, dk) \
+        / jnp.sqrt(jnp.float32(dk)).astype(x.dtype)
+    v = jnp.einsum("btd,dh->bth", x, p["wv"]).reshape(b, nc, c, h, dvl)
+    lf = jax.nn.log_sigmoid(jnp.einsum("btd,dh->bth", x.astype(jnp.float32),
+                                       p["wf"])).reshape(b, nc, c, h)
+    li = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wi"]) \
+        .reshape(b, nc, c, h)
+    clf = jnp.cumsum(lf, axis=2)                           # within-chunk
+    total = clf[:, :, -1, :]                               # [b,nc,h]
+
+    # intra-chunk: D_ij = exp(clf_i - clf_j + li_j), j <= i (stabilized)
+    gate = clf[:, :, :, None, :] - clf[:, :, None, :, :] \
+        + li[:, :, None, :, :]                             # [b,nc,i,j,h]
+    ti = jnp.arange(c)
+    causal = (ti[:, None] >= ti[None, :])[None, None, :, :, None]
+    gate = jnp.where(causal, gate, -jnp.inf)
+    # numerical stabilizer per (b,nc,i,h)
+    mstab = jnp.maximum(jnp.max(gate, axis=3), 0.0)        # [b,nc,i,h]
+    dmat = jnp.exp(gate - mstab[:, :, :, None, :])
+    scores = jnp.einsum("bnihd,bnjhd->bnijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dmat
+    intra = jnp.einsum("bnijh,bnjhv->bnihv", scores, v.astype(jnp.float32))
+    n_intra = jnp.einsum("bnijh,bnjhd->bnihd", scores, k.astype(jnp.float32))
+
+    # inter-chunk recurrent state S [b,h,dk,dvl], normalizer N [b,h,dk]
+    kv = jnp.einsum("bnjhd,bnjhv,bnjh->bnhdv", k.astype(jnp.float32),
+                    v.astype(jnp.float32),
+                    jnp.exp(total[:, :, None, :] - clf + li))
+    ksum = jnp.einsum("bnjhd,bnjh->bnhd", k.astype(jnp.float32),
+                      jnp.exp(total[:, :, None, :] - clf + li))
+
+    def step(carry, inp):
+        S, N = carry
+        kv_c, ks_c, tot_c = inp
+        outS, outN = S, N
+        S = S * jnp.exp(tot_c)[..., None, None] + kv_c
+        N = N * jnp.exp(tot_c)[..., None] + ks_c
+        return (S, N), (outS, outN)
+
+    S0 = jnp.zeros((b, h, dk, dvl), jnp.float32)
+    N0 = jnp.zeros((b, h, dk), jnp.float32)
+    (S_fin, N_fin), (S_hist, N_hist) = lax.scan(
+        step, (S0, N0),
+        (kv.transpose(1, 0, 2, 3, 4), ksum.transpose(1, 0, 2, 3),
+         total.transpose(1, 0, 2)))
+    S_hist = S_hist.transpose(1, 0, 2, 3, 4)               # [b,nc,h,dk,dvl]
+    N_hist = N_hist.transpose(1, 0, 2, 3)
+
+    qs = q.astype(jnp.float32) * jnp.exp(clf - mstab)[..., None]
+    inter = jnp.einsum("bnihd,bnhdv->bnihv", qs, S_hist)
+    n_inter = jnp.einsum("bnihd,bnhd->bnihd", qs, N_hist)
+
+    num = intra + inter                                    # [b,nc,c,h,dvl]
+    nq = jnp.sum((n_intra + n_inter)
+                 * q.astype(jnp.float32), axis=-1)         # [b,nc,c,h]
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-mstab))[..., None]
+    y = (num / denom).reshape(b, t, h * dvl).astype(x.dtype)
+    out = jnp.einsum("bth,hd->btd", y, p["out"])
+    out = lax.psum(out, tp_axis)
+    if return_state:
+        state = {"S": S_fin, "N": N_fin, "m": jnp.zeros((b, h), jnp.float32)}
+        return out, state
+    return out
+
+
+def mlstm_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig,
+                 tp_axis: str, tp: int) -> Tuple[jax.Array, Dict]:
+    """x [B,1,d]; state {"S": [B,H,dk,dvl], "N": [B,H,dk], "m": [B,H]}."""
+    b = x.shape[0]
+    h, dk, dvl = mlstm_dims(cfg, tp)
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])[:, 0].reshape(b, h, dk)
+    k = (jnp.einsum("btd,dh->bth", x, p["wk"])[:, 0].reshape(b, h, dk)
+         / jnp.sqrt(jnp.float32(dk)).astype(x.dtype))
+    v = jnp.einsum("btd,dh->bth", x, p["wv"])[:, 0].reshape(b, h, dvl)
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wf"])[:, 0])
+    li = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wi"])[:, 0]
+    m_new = jnp.maximum(state["m"] + lf, li)               # [B,H]
+    sc_old = jnp.exp(state["m"] + lf - m_new)
+    sc_in = jnp.exp(li - m_new)
+    S = state["S"] * sc_old[..., None, None] \
+        + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32),
+                     v.astype(jnp.float32)) * sc_in[..., None, None]
+    N = state["N"] * sc_old[..., None] \
+        + k.astype(jnp.float32) * sc_in[..., None]
+    num = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), S)
+    nq = jnp.sum(N * q.astype(jnp.float32), axis=-1)       # [B,H]
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_new))[..., None]
+    y = (num / denom).reshape(b, h * dvl).astype(x.dtype)
+    out = jnp.einsum("bh,hd->bd", y, p["out"])[:, None]
+    return lax.psum(out, tp_axis), {"S": S, "N": N, "m": m_new}
+
+
+def mlstm_init_state(b: int, cfg: ModelConfig, tp: int):
+    h, dk, dvl = mlstm_dims(cfg, tp)
+    return {"S": jnp.zeros((b, h, dk, dvl), jnp.float32),
+            "N": jnp.zeros((b, h, dk), jnp.float32),
+            "m": jnp.zeros((b, h), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential; replicated across model axis)
+# ---------------------------------------------------------------------------
+
+def slstm_params(key, cfg: ModelConfig, tp: int, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    wx = dense_init(ks[0], (d, 4 * d), dtype=dtype)        # i,f,z,o
+    wr = dense_init(ks[1], (h, dh, 4 * dh), dtype=dtype)   # block-diag recur
+    out = dense_init(ks[2], (d, d), dtype=dtype)
+    return {"wx": wx, "wr": wr, "out": out,
+            "bias": jnp.zeros((4 * d,), jnp.float32)}
+
+
+def _slstm_cell(p, xt, state, cfg: ModelConfig):
+    """xt [B,d]; state (c,n,hprev,m) each [B,H,dh]-ish."""
+    b = xt.shape[0]
+    h_heads, d = cfg.n_heads, cfg.d_model
+    dh = d // h_heads
+    c, n, hprev, m = state
+    zx = jnp.einsum("bd,dk->bk", xt, p["wx"]).astype(jnp.float32)
+    zr = jnp.einsum("bhe,hek->bhk", hprev.astype(xt.dtype), p["wr"]) \
+        .astype(jnp.float32)                               # [B,H,4dh]
+    z = zx.reshape(b, h_heads, 4 * dh) + zr \
+        + p["bias"].reshape(h_heads, 4 * dh)[None]
+    zi, zf, zz, zo = jnp.split(z, 4, axis=-1)              # [B,H,dh]
+    m_new = jnp.maximum(zf + m, zi)                        # exp-gate stabilizer
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(zf + m - m_new)
+    c = f * c + i * jnp.tanh(zz)
+    n = f * n + i
+    o = jax.nn.sigmoid(zo)
+    hnew = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (c, n, hnew, m_new), hnew
+
+
+def slstm_train(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str,
+                tp: int, return_state: bool = False):
+    b, t, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    zeros = jnp.zeros((b, h_heads, dh), jnp.float32)
+    state = (zeros, zeros, zeros, zeros)
+
+    def step(carry, xt):
+        return _slstm_cell(p, xt, carry, cfg)
+
+    fin, hs = lax.scan(step, state, x.transpose(1, 0, 2))  # [T,B,H,dh]
+    y = hs.transpose(1, 0, 2, 3).reshape(b, t, d).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", y, p["out"])
+    if return_state:
+        return out, fin
+    return out
+
+
+def slstm_decode(p: Dict, x: jax.Array, state, cfg: ModelConfig,
+                 tp_axis: str, tp: int):
+    new_state, hnew = _slstm_cell(p, x[:, 0], state, cfg)
+    b, d = x.shape[0], x.shape[2]
+    y = hnew.reshape(b, d).astype(x.dtype)
+    return jnp.einsum("bd,de->be", y, p["out"])[:, None], new_state
+
+
+def slstm_init_state(b: int, cfg: ModelConfig):
+    h_heads, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((b, h_heads, dh), jnp.float32)
+    return (z, z, z, z)

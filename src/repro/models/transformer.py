@@ -1,0 +1,578 @@
+"""Model assembly: period-pattern blocks scanned over depth, inside shard_map.
+
+One code path serves all ten assigned architectures; the period ``pattern``
+in the config decides which blocks appear (attn / mamba / mlstm / slstm) and
+which FFN kind follows (dense / moe / moe+dense / none).  Whisper adds an
+encoder stack + per-period cross-attention; VLM prepends stub patch
+embeddings.  All functions here run INSIDE shard_map (axis names passed in).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as A
+from . import moe as MOE
+from . import ssm as SSM
+from .common import (KeyGen, ModelConfig, act_fn, dense_init, embed,
+                     lm_head_logits, lm_head_loss, rmsnorm)
+from .sharding import fsdp_gather, model_spec, period_spec, to_pspec
+
+Params = Dict[str, Any]
+
+
+def padded_vocab(cfg: ModelConfig, tp: int) -> int:
+    return -(-cfg.vocab // (tp * 16)) * (tp * 16)
+
+
+# ---------------------------------------------------------------------------
+# Global-shape parameter builders (sharded by pjit via sharding.model_spec)
+# ---------------------------------------------------------------------------
+
+def _attn_params_global(key, cfg: ModelConfig, tp: int, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    hq = cfg.n_heads_padded(tp)
+    kvw = cfg.n_kv * hd if cfg.n_kv >= tp else cfg.n_kv * hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, hq * hd), dtype=dtype),
+         "wk": dense_init(ks[1], (d, kvw), dtype=dtype),
+         "wv": dense_init(ks[2], (d, kvw), dtype=dtype),
+         "wo": dense_init(ks[3], (hq * hd, d), dtype=dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((kvw,), dtype)
+        p["bv"] = jnp.zeros((kvw,), dtype)
+    return p
+
+
+def _ffn_params_global(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"w1": dense_init(ks[0], (d, ff), dtype=dtype),
+            "w3": dense_init(ks[1], (d, ff), dtype=dtype),
+            "w2": dense_init(ks[2], (ff, d), dtype=dtype)}
+
+
+def _moe_params_global(key, cfg: ModelConfig, tp: int, dtype):
+    d, eff = cfg.d_model, cfg.expert_d_ff
+    ep = cfg.n_experts_padded(tp)
+    ks = jax.random.split(key, 4)
+    return {"router": dense_init(ks[0], (d, ep), dtype=jnp.float32),
+            "w1": dense_init(ks[1], (ep, d, eff), scale_axis=1, dtype=dtype),
+            "w3": dense_init(ks[2], (ep, d, eff), scale_axis=1, dtype=dtype),
+            "w2": dense_init(ks[3], (ep, eff, d), scale_axis=1, dtype=dtype)}
+
+
+def _mamba_params_global(key, cfg: ModelConfig, dtype):
+    d, n, k = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    di = 2 * d
+    ks = jax.random.split(key, 8)
+    return {"in_x": dense_init(ks[0], (d, di), dtype=dtype),
+            "in_z": dense_init(ks[1], (d, di), dtype=dtype),
+            "conv": dense_init(ks[2], (k, di), dtype=dtype),
+            "w_dt": dense_init(ks[3], (d, di), dtype=dtype),
+            "w_B": dense_init(ks[4], (d, n), dtype=dtype),
+            "w_C": dense_init(ks[5], (d, n), dtype=dtype),
+            "A_log": jnp.zeros((di, n), jnp.float32),
+            "D": jnp.ones((di,), jnp.float32),
+            "out": dense_init(ks[6], (di, d), dtype=dtype)}
+
+
+def _mlstm_params_global(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {"wq": dense_init(ks[0], (d, d), dtype=dtype),
+            "wk": dense_init(ks[1], (d, d), dtype=dtype),
+            "wv": dense_init(ks[2], (d, d), dtype=dtype),
+            "wi": dense_init(ks[3], (d, h), dtype=jnp.float32),
+            "wf": dense_init(ks[4], (d, h), dtype=jnp.float32),
+            "out": dense_init(ks[5], (d, d), dtype=dtype)}
+
+
+def _slstm_params_global(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {"wx": dense_init(ks[0], (d, 4 * d), dtype=dtype),
+            "wr": dense_init(ks[1], (h, dh, 4 * dh), scale_axis=1, dtype=dtype),
+            "out": dense_init(ks[2], (d, d), dtype=dtype),
+            "bias": jnp.zeros((4 * d,), jnp.float32)}
+
+
+_BLOCK_BUILDERS = {
+    "attn": lambda k, cfg, tp, dt: _attn_params_global(k, cfg, tp, dt),
+    "mamba": lambda k, cfg, tp, dt: _mamba_params_global(k, cfg, dt),
+    "mlstm": lambda k, cfg, tp, dt: _mlstm_params_global(k, cfg, dt),
+    "slstm": lambda k, cfg, tp, dt: _slstm_params_global(k, cfg, dt),
+}
+
+
+def _period_params(key, cfg: ModelConfig, tp: int, dtype):
+    out = {}
+    kg = jax.random.split(key, 3 * len(cfg.pattern))
+    for j, (blk, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+        e = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+             blk: _BLOCK_BUILDERS[blk](kg[3 * j], cfg, tp, dtype)}
+        if ffn != "none":
+            e["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if ffn in ("dense", "moe+dense"):
+            e["ffn"] = _ffn_params_global(kg[3 * j + 1], cfg, dtype)
+        if ffn in ("moe", "moe+dense"):
+            e["moe"] = _moe_params_global(kg[3 * j + 2], cfg, tp, dtype)
+        out[f"b{j}"] = e
+    return out
+
+
+def init_params(cfg: ModelConfig, tp: int, seed: int = 0) -> Params:
+    """Global-shape parameter pytree (shard via sharding.model_spec)."""
+    kg = KeyGen(seed)
+    dtype = cfg.dtype
+    vp = padded_vocab(cfg, tp)
+    keys = jax.random.split(kg(), cfg.n_periods)
+    blocks = jax.vmap(lambda k: _period_params(k, cfg, tp, dtype))(keys)
+    p: Params = {
+        "emb": dense_init(kg(), (vp, cfg.d_model), scale_axis=1, dtype=dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(kg(), (cfg.d_model, vp), dtype=dtype)
+    if cfg.enc_layers:
+        ekeys = jax.random.split(kg(), cfg.enc_layers)
+
+        def enc_period(k):
+            ks = jax.random.split(k, 2)
+            return {"b0": {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "attn": _attn_params_global(ks[0], cfg, tp, dtype),
+                           "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "ffn": _ffn_params_global(ks[1], cfg, dtype)}}
+        p["enc_blocks"] = jax.vmap(enc_period)(ekeys)
+        p["enc_ln"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        ckeys = jax.random.split(kg(), cfg.n_periods)
+        p["cross"] = jax.vmap(
+            lambda k: _attn_params_global(k, cfg, tp, dtype))(ckeys)
+        p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Localization inside shard_map (kv replication slice)
+# ---------------------------------------------------------------------------
+
+def _localize_attn(p: Params, cfg: ModelConfig, tp_axis: str, tp: int):
+    """Slice replicated kv weights down to this device's kv head(s)."""
+    if cfg.n_kv >= tp:
+        return p
+    kvl, hd = cfg.kv_local(tp), cfg.hd
+    idx = (lax.axis_index(tp_axis) * cfg.n_kv) // tp
+    q = dict(p)
+    q["wk"] = lax.dynamic_slice_in_dim(p["wk"], idx * kvl * hd, kvl * hd, 1)
+    q["wv"] = lax.dynamic_slice_in_dim(p["wv"], idx * kvl * hd, kvl * hd, 1)
+    if cfg.qkv_bias:
+        q["bk"] = lax.dynamic_slice_in_dim(p["bk"], idx * kvl * hd, kvl * hd, 0)
+        q["bv"] = lax.dynamic_slice_in_dim(p["bv"], idx * kvl * hd, kvl * hd, 0)
+    return q
+
+
+def ffn_fwd(p: Params, x: jax.Array, cfg: ModelConfig, tp_axis: str):
+    h = act_fn(jnp.einsum("btd,df->btf", x, p["w1"]), cfg.act) \
+        * jnp.einsum("btd,df->btf", x, p["w3"])
+    return lax.psum(jnp.einsum("btf,fd->btd", h, p["w2"]), tp_axis)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _attn_any(pa, h, cfg, ax, w, positions, causal=True, return_kv=False):
+    """Dispatch: blocked (flash-style) attention for long sequences."""
+    fn = A.attn_train_blocked if h.shape[1] >= A.BLOCKED_ATTN_THRESHOLD \
+        else A.attn_train
+    return fn(pa, h, cfg, ax.tp_axis, ax.tp, w, positions=positions,
+              causal=causal, return_kv=return_kv)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    tp_axis: str = "model"
+    tp: int = 1
+    dp_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Optional[Tuple[str, ...]] = None
+
+
+def _make_ckpt(cfg: ModelConfig):
+    """Per-block remat wrapper honoring cfg.remat_policy (perf knob):
+    "full"  — recompute everything in the backward (min memory);
+    "dots"  — save matmul outputs, recompute elementwise only (cuts the
+              remat recompute FLOPs; SPerf hillclimb H3)."""
+    import functools
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return functools.partial(jax.checkpoint, policy=pol)
+    return jax.checkpoint
+
+
+def _period_fwd(pp: Params, x: jax.Array, cfg: ModelConfig, ax: AxisCtx,
+                positions: jax.Array, cross_kv=None, cross_p=None,
+                ln_cross=None, causal: bool = True):
+    """One period of blocks, full-sequence.  Returns (x, aux_loss).
+
+    Each block is individually remat'd (nested under the period-scan
+    checkpoint): the backward pass holds ONE block's internals at a time —
+    without this, rematerializing a whole jamba period keeps 7 mamba scans
+    + 4 MoE dispatch buffers live simultaneously (~180 GB/device measured).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    ckpt = _make_ckpt(cfg)
+    for j, (blk, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+        e = pp[f"b{j}"]
+        w = cfg.window_pattern[j] if cfg.window_pattern else cfg.window
+
+        def mixer(e, x):
+            h = rmsnorm(x, e["ln1"], cfg.norm_eps)
+            if blk == "attn":
+                pa = _localize_attn(e["attn"], cfg, ax.tp_axis, ax.tp)
+                return x + _attn_any(pa, h, cfg, ax, w, positions,
+                                     causal=causal)
+            if blk == "mamba":
+                return x + SSM.mamba_train(e["mamba"], h, cfg, ax.tp_axis,
+                                           ax.tp)
+            if blk == "mlstm":
+                return x + SSM.mlstm_train(e["mlstm"], h, cfg, ax.tp_axis,
+                                           ax.tp)
+            if blk == "slstm":
+                return x + SSM.slstm_train(e["slstm"], h, cfg, ax.tp_axis,
+                                           ax.tp)
+            raise ValueError(blk)
+
+        x = ckpt(mixer)(e, x)
+        if cross_kv is not None and blk == "attn":
+            def crossblk(cp, ck, cv, x):
+                hc = rmsnorm(x, ln_cross, cfg.norm_eps)
+                pc = _localize_attn(cp, cfg, ax.tp_axis, ax.tp)
+                return x + A.cross_attn(pc, hc, ck, cv, cfg, ax.tp_axis,
+                                        ax.tp)
+            x = ckpt(crossblk)(cross_p, cross_kv[0], cross_kv[1], x)
+        if ffn == "none":
+            continue
+
+        def ffnblk(e, x):
+            h2 = rmsnorm(x, e["ln2"], cfg.norm_eps)
+            y2 = jnp.zeros_like(x)
+            a = jnp.zeros((), jnp.float32)
+            if ffn in ("dense", "moe+dense"):
+                y2 = y2 + ffn_fwd(e["ffn"], h2, cfg, ax.tp_axis)
+            if ffn in ("moe", "moe+dense"):
+                ym, a, _ = MOE.moe_ffn(e["moe"], h2, cfg, ax.tp_axis, ax.tp,
+                                       capacity_factor=cfg.moe_capacity,
+                                       token_shard=cfg.moe_token_shard)
+                y2 = y2 + ym
+            return x + y2, a
+
+        x, a = ckpt(ffnblk)(e, x)
+        aux = aux + a
+    return x, aux
+
+
+def encoder_fwd(params: Params, frames: jax.Array, cfg: ModelConfig,
+                ax: AxisCtx) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings [B, S, d]."""
+    x = frames
+    t = frames.shape[1]
+    pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(frames.shape[0], 0)
+
+    def body(x, pp):
+        x, _ = _period_fwd(pp, x, cfg, ax, pos, causal=False)
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def forward_loss(params: Params, tokens: jax.Array, labels: jax.Array,
+                 cfg: ModelConfig, ax: AxisCtx,
+                 extra_embeds: Optional[jax.Array] = None,
+                 enc_frames: Optional[jax.Array] = None,
+                 loss_mask: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Training forward. tokens/labels [B, T_text].  Returns (loss, aux)."""
+    x = embed(params["emb"], tokens, ax.tp_axis).astype(cfg.dtype)
+    mask = loss_mask
+    if extra_embeds is not None:  # VLM: prepend patch embeddings
+        b, ti = extra_embeds.shape[:2]
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+        pad_lbl = jnp.zeros((b, ti), labels.dtype)
+        labels = jnp.concatenate([pad_lbl, labels], axis=1)
+        m0 = jnp.ones_like(tokens, jnp.float32) if mask is None else mask
+        mask = jnp.concatenate([jnp.zeros((b, ti), jnp.float32), m0], axis=1)
+    b, t, _ = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+
+    cross_kv = None
+    if cfg.enc_layers:
+        enc_out = encoder_fwd(params, enc_frames.astype(cfg.dtype), cfg, ax)
+
+    def body(carry, pp_and_cross):
+        x, aux = carry
+        if cfg.enc_layers:
+            pp, cross_p = pp_and_cross
+            pa = _localize_attn(cross_p, cfg, ax.tp_axis, ax.tp)
+            ckv = A.encode_kv(pa, enc_out, cfg, ax.tp)
+            x, a = _period_fwd(pp, x, cfg, ax, positions, cross_kv=ckv,
+                               cross_p=cross_p, ln_cross=params["ln_cross"])
+        else:
+            pp = pp_and_cross
+            if ax.fsdp_axes:
+                pp = fsdp_gather(pp, period_spec(cfg, ax.tp), ax.fsdp_axes)
+            x, a = _period_fwd(pp, x, cfg, ax, positions)
+        return (x, aux + a), None
+
+    xs = (params["blocks"], params["cross"]) if cfg.enc_layers \
+        else params["blocks"]
+    (x, aux), _ = lax.scan(jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)),
+                           xs)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    # mask out padded vocab columns via label validity only (padded ids never
+    # appear as labels; padded logits participate in softmax as noise columns
+    # with ~N(0, 1/d) init — acceptable, noted in DESIGN).
+    loss = lm_head_loss(x, head.astype(jnp.float32), labels, ax.tp_axis, mask)
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, b: int, max_seq: int, tp: int,
+               seq_shards: int = 1):
+    """Stacked per-period cache pytree (attn caches hold S/seq_shards)."""
+    s_loc = max_seq // seq_shards
+    kvl, hd = cfg.kv_local(tp), cfg.hd
+    per = {}
+    for j, blk in enumerate(cfg.pattern):
+        if blk == "attn":
+            per[f"b{j}"] = {
+                "k": jnp.zeros((cfg.n_periods, b, s_loc, kvl, hd), cfg.dtype),
+                "v": jnp.zeros((cfg.n_periods, b, s_loc, kvl, hd), cfg.dtype)}
+        elif blk == "mamba":
+            st = SSM.mamba_init_state(b, cfg, tp, cfg.dtype)
+            per[f"b{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), st)
+        elif blk == "mlstm":
+            st = SSM.mlstm_init_state(b, cfg, tp)
+            per[f"b{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), st)
+        elif blk == "slstm":
+            st = SSM.slstm_init_state(b, cfg)
+            per[f"b{j}"] = tuple(
+                jnp.broadcast_to(x, (cfg.n_periods,) + x.shape) for x in st)
+    return per
+
+
+def forward_decode(params: Params, token: jax.Array, pos: jax.Array,
+                   cache, cfg: ModelConfig, ax: AxisCtx,
+                   seq_axis: Optional[str] = None, seq_shards: int = 1,
+                   cross_cache=None, serve2d: bool = False,
+                   mesh_sizes=None) -> Tuple[jax.Array, Any]:
+    """One decode step.  token [B] ids; pos [B]; returns (local logits
+    [B, V_local], new cache).  seq_axis set => split-KV sharded cache.
+
+    serve2d: 2D weight-stationary decode (SPerf H4) — FSDP shards are used
+    in place (no per-period weight gathers); activations batch-replicate
+    around each projection instead.  Dense-attention fsdp archs with a
+    batch-sharded cache only (not with seq_axis; MoE/SSM: future work).
+    """
+    if serve2d:
+        assert cfg.fsdp, "serve2d: fsdp archs only"
+        assert all(b in ("attn", "mamba") for b in cfg.pattern), \
+            "serve2d: attn/mamba blocks (mlstm/slstm archs are not fsdp)"
+    x = embed(params["emb"], token[:, None], ax.tp_axis).astype(cfg.dtype)
+
+    def body(x, scanned):
+        if cfg.enc_layers:
+            pp, cc, cross_p, ckv = scanned
+        else:
+            pp, cc = scanned
+            cross_p = ckv = None
+        if ax.fsdp_axes and not cfg.enc_layers and not serve2d:
+            pp = fsdp_gather(pp, period_spec(cfg, ax.tp), ax.fsdp_axes)
+        new_cc = {}
+        for j, (blk, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+            e = pp[f"b{j}"]
+            h = rmsnorm(x, e["ln1"], cfg.norm_eps)
+            w = cfg.window_pattern[j] if cfg.window_pattern else cfg.window
+            if blk == "attn" and serve2d:
+                y, nk, nv = A.attn_decode_2d(
+                    e["attn"], h, cc[f"b{j}"]["k"], cc[f"b{j}"]["v"], pos,
+                    cfg, ax.tp_axis, ax.tp, w, ax.fsdp_axes, mesh_sizes,
+                    seq_axis=seq_axis, seq_shards=seq_shards)
+                new_cc[f"b{j}"] = {"k": nk, "v": nv}
+            elif blk == "attn":
+                pa = _localize_attn(e["attn"], cfg, ax.tp_axis, ax.tp)
+                if seq_axis is not None:
+                    y, nk, nv = A.attn_decode_splitkv(
+                        pa, h, cc[f"b{j}"]["k"], cc[f"b{j}"]["v"], pos, cfg,
+                        ax.tp_axis, ax.tp, w, seq_axis, seq_shards)
+                else:
+                    y, nk, nv = A.attn_decode(
+                        pa, h, cc[f"b{j}"]["k"], cc[f"b{j}"]["v"], pos, cfg,
+                        ax.tp_axis, ax.tp, w)
+                new_cc[f"b{j}"] = {"k": nk, "v": nv}
+            elif blk == "mamba" and serve2d:
+                from . import serve2d as S2D
+                y, st = S2D.mamba_decode_2d(
+                    e["mamba"], h, cc[f"b{j}"], cfg, ax.tp_axis, ax.tp,
+                    ax.fsdp_axes, mesh_sizes,
+                    batch_replicated=seq_axis is not None)
+                new_cc[f"b{j}"] = st
+            elif blk == "mamba":
+                y, st = SSM.mamba_decode(e["mamba"], h, cc[f"b{j}"], cfg,
+                                         ax.tp_axis, ax.tp)
+                new_cc[f"b{j}"] = st
+            elif blk == "mlstm":
+                y, st = SSM.mlstm_decode(e["mlstm"], h, cc[f"b{j}"], cfg,
+                                         ax.tp_axis, ax.tp)
+                new_cc[f"b{j}"] = st
+            elif blk == "slstm":
+                y, st = SSM.slstm_decode(e["slstm"], h, cc[f"b{j}"], cfg,
+                                         ax.tp_axis, ax.tp)
+                new_cc[f"b{j}"] = st
+            x = x + y
+            if ckv is not None and blk == "attn":
+                hc = rmsnorm(x, params["ln_cross"], cfg.norm_eps)
+                pc = _localize_attn(cross_p, cfg, ax.tp_axis, ax.tp)
+                x = x + A.cross_attn(pc, hc, ckv[0], ckv[1], cfg,
+                                     ax.tp_axis, ax.tp)
+            if ffn == "none":
+                continue
+            h2 = rmsnorm(x, e["ln2"], cfg.norm_eps)
+            y2 = jnp.zeros_like(x)
+            if ffn in ("dense", "moe+dense"):
+                if serve2d:
+                    y2 = y2 + A.ffn_2d(e["ffn"], h2, cfg, ax.tp_axis,
+                                       ax.fsdp_axes, mesh_sizes,
+                                       batch_replicated=seq_axis is not None)
+                else:
+                    y2 = y2 + ffn_fwd(e["ffn"], h2, cfg, ax.tp_axis)
+            if ffn in ("moe", "moe+dense"):
+                if serve2d:
+                    from . import serve2d as S2D
+                    ym = S2D.moe_ffn_2d(e["moe"], h2, cfg, ax.tp_axis,
+                                        ax.tp, ax.fsdp_axes, mesh_sizes,
+                                        batch_replicated=seq_axis is not None)
+                else:
+                    ym, _, _ = MOE.moe_ffn(
+                        e["moe"], h2, cfg, ax.tp_axis, ax.tp,
+                        capacity_factor=cfg.moe_capacity,
+                        token_shard=cfg.moe_token_shard)
+                y2 = y2 + ym
+            x = x + y2
+        return x, new_cc
+
+    if cfg.enc_layers:
+        xs = (params["blocks"], cache, params["cross"], cross_cache)
+    else:
+        xs = (params["blocks"], cache)
+    x, new_cache = lax.scan(body, x, xs)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    logits = lm_head_logits(x, head.astype(jnp.float32))[:, 0]
+    return logits, new_cache
+
+
+def forward_prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                    ax: AxisCtx, max_seq: int,
+                    enc_frames: Optional[jax.Array] = None,
+                    extra_embeds: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Any]:
+    """Prompt forward; returns (last-position local logits [B, V_local],
+    cache sized to ``max_seq``).  Prefill is always dense over the prompt."""
+    x = embed(params["emb"], tokens, ax.tp_axis).astype(cfg.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+    b, t, _ = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    if cfg.enc_layers:
+        enc_out = encoder_fwd(params, enc_frames.astype(cfg.dtype), cfg, ax)
+
+    def body(x, scanned):
+        if cfg.enc_layers:
+            pp, cross_p = scanned
+        else:
+            pp = scanned
+            cross_p = None
+            if ax.fsdp_axes:
+                pp = fsdp_gather(pp, period_spec(cfg, ax.tp), ax.fsdp_axes)
+        cc = {}
+        xx = x
+        for j, (blk, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+            e = pp[f"b{j}"]
+            h = rmsnorm(xx, e["ln1"], cfg.norm_eps)
+            w = cfg.window_pattern[j] if cfg.window_pattern else cfg.window
+            if blk == "attn":
+                pa = _localize_attn(e["attn"], cfg, ax.tp_axis, ax.tp)
+                y, (k, v) = _attn_any(pa, h, cfg, ax, w, positions,
+                                      return_kv=True)
+                pad = max_seq - t
+                cc[f"b{j}"] = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+            elif blk == "mamba":
+                y, st = SSM.mamba_train(e["mamba"], h, cfg, ax.tp_axis, ax.tp,
+                                        return_state=True)
+                cc[f"b{j}"] = st
+            elif blk == "mlstm":
+                y, st = SSM.mlstm_train(e["mlstm"], h, cfg, ax.tp_axis, ax.tp,
+                                        return_state=True)
+                cc[f"b{j}"] = st
+            elif blk == "slstm":
+                y, st = SSM.slstm_train(e["slstm"], h, cfg, ax.tp_axis, ax.tp,
+                                        return_state=True)
+                cc[f"b{j}"] = st
+            xx = xx + y
+            if cfg.enc_layers and blk == "attn":
+                hc = rmsnorm(xx, params["ln_cross"], cfg.norm_eps)
+                pc = _localize_attn(cross_p, cfg, ax.tp_axis, ax.tp)
+                ck, cv = A.encode_kv(pc, enc_out, cfg, ax.tp)
+                xx = xx + A.cross_attn(pc, hc, ck, cv, cfg, ax.tp_axis, ax.tp)
+            if ffn == "none":
+                continue
+            h2 = rmsnorm(xx, e["ln2"], cfg.norm_eps)
+            y2 = jnp.zeros_like(xx)
+            if ffn in ("dense", "moe+dense"):
+                y2 = y2 + ffn_fwd(e["ffn"], h2, cfg, ax.tp_axis)
+            if ffn in ("moe", "moe+dense"):
+                ym, _, _ = MOE.moe_ffn(e["moe"], h2, cfg, ax.tp_axis, ax.tp,
+                                       capacity_factor=cfg.moe_capacity,
+                                       token_shard=cfg.moe_token_shard)
+                y2 = y2 + ym
+            xx = xx + y2
+        return xx, cc
+
+    xs = (params["blocks"], params["cross"]) if cfg.enc_layers \
+        else params["blocks"]
+    x, cache = lax.scan(jax.checkpoint(body), x, xs)
+    x = rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    logits = lm_head_logits(x, head.astype(jnp.float32))[:, 0]
+    return logits, cache
+
+
+def build_cross_cache(params: Params, enc_frames: jax.Array,
+                      cfg: ModelConfig, ax: AxisCtx):
+    """Whisper: encoder forward + per-period cross K/V."""
+    enc_out = encoder_fwd(params, enc_frames.astype(cfg.dtype), cfg, ax)
+
+    def per(cross_p):
+        pa = _localize_attn(cross_p, cfg, ax.tp_axis, ax.tp)
+        k, v = A.encode_kv(pa, enc_out, cfg, ax.tp)
+        return k, v
+
+    return jax.vmap(per)(params["cross"]) if False else \
+        lax.map(per, params["cross"])

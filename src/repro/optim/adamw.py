@@ -1,0 +1,68 @@
+"""AdamW with the same sharding as the params (runs inside shard_map).
+
+Optimizer state is a pytree mirroring the params; under FSDP the m/v leaves
+inherit the param shards, giving ZeRO-style partitioned optimizer state for
+free (the pjit in_shardings reuse the param spec tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params, gnorm=None):
+        step = state.step + 1
+        if gnorm is None:
+            # local-view global-norm (callers under shard_map pass the
+            # sharding-aware norm instead)
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                     for g in jax.tree.leaves(grads))
+            gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (standard)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,469 @@
+"""Train / serve step builders: shard_map bodies + pjit wrappers.
+
+This is where the paper's primitive becomes a first-class training feature.
+Gradient sync over the data axes supports three modes:
+
+  * ``ring``   — stock ``lax.psum`` (XLA ring): every framework's baseline.
+  * ``hier``   — the paper's *heterogeneous-degree nested butterfly*, dense:
+    reduce-scatter down the degree sequence, all-gather back up
+    (core.allreduce.dense_allreduce_hierarchical), degrees tunable.
+  * ``sparse`` — the paper's Sparse Allreduce for the input-embedding
+    gradient (rows touched by the batch; the paper's mini-batch use case,
+    §I-A.1) + hier for everything else.  NOTE: with tied embeddings the
+    softmax-head contribution makes the emb grad dense in vocab, so sparse
+    mode is exercised on untied variants (DESIGN.md §sync); tied configs
+    fall back to hier for that leaf.
+
+FSDP leaves need no explicit sync: the per-period all_gather's transpose IS
+the reduce-scatter (sum over data) — they are only rescaled by 1/dp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.allreduce import (DevicePlan, dense_allreduce_hierarchical,
+                                  make_device_plan, sparse_allreduce_union)
+from repro.core.sparse_vec import SENTINEL, HashPerm, SparseChunk
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.models.sharding import (full_model_pspec, full_model_spec_tuples,
+                                   to_pspec)
+from repro.optim.adamw import AdamW, AdamWState
+
+SYNC_PERM = HashPerm.make(1234)
+
+
+# ---------------------------------------------------------------------------
+# Mesh bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    tp_axis: str
+    dp_axes: Tuple[str, ...]
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes)
+
+    def axis_ctx(self, cfg: ModelConfig) -> T.AxisCtx:
+        return T.AxisCtx(tp_axis=self.tp_axis, tp=self.tp,
+                         dp_axes=self.dp_axes,
+                         fsdp_axes=self.dp_axes if cfg.fsdp else None)
+
+
+def mesh_ctx(mesh: Mesh) -> MeshCtx:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n != "model")
+    return MeshCtx(mesh=mesh, tp_axis="model", dp_axes=dp)
+
+
+def default_dp_plan(mc: MeshCtx, in_capacity: int, out_capacity: int,
+                    degrees=None) -> DevicePlan:
+    """Butterfly plan over the data axes (pod stage first — slowest link
+    gets the outermost layer, per the paper's degree-ordering argument).
+
+    degrees="auto" runs the paper's topology tuner against the TPU fabrics
+    per axis (an EC2-tuned 16x4 is NOT optimal on a ~1 us-alpha fabric —
+    see EXPERIMENTS H1 iterations 4-5)."""
+    axes = [(a, mc.mesh.shape[a]) for a in mc.dp_axes]
+    if degrees == "auto":
+        from repro.core.netmodel import TPU_DCN, TPU_ICI
+        from repro.core.topology import tune
+        degrees = {}
+        for a, s in axes:
+            fabric = TPU_DCN if a == "pod" else TPU_ICI
+            plan = tune(s, n0=max(in_capacity, 1),
+                        total_range=max(out_capacity, 2) * 4,
+                        fabric=fabric, serial_nic=False)
+            degrees[a] = plan.degrees
+    elif degrees is None:
+        degrees = {a: (s,) for a, s in axes}   # round-robin per axis
+    return make_device_plan(axes, degrees, in_capacity=in_capacity,
+                            out_capacity=out_capacity)
+
+
+# ---------------------------------------------------------------------------
+# Gradient sync (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _hier_allreduce_leaf(g: jax.Array, plan: DevicePlan) -> jax.Array:
+    m = plan.num_nodes
+    n = g.size
+    pad = (-n) % m
+    flat = jnp.pad(g.astype(jnp.float32).reshape(-1), (0, pad))
+    out = dense_allreduce_hierarchical(flat, plan)
+    return out[:n].reshape(g.shape).astype(g.dtype)
+
+
+def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
+                     dplan: DevicePlan, edges: Sequence[jax.Array]
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Sparse Allreduce of a row-sparse gradient table over the data axes.
+
+    grad: [V_local, d] this device's vocab-shard gradient (model-sharded).
+    ids:  [N] global token ids appearing in the local batch.
+    Returns (synced grad, overflow count).  config+reduce fused — dynamic
+    indices, the paper's mini-batch mode.
+    """
+    v_l, d = grad.shape
+    v_start = lax.axis_index(mc.tp_axis) * v_l
+    loc = ids.reshape(-1).astype(jnp.int32) - v_start
+    mine = (loc >= 0) & (loc < v_l)
+    hashed = jnp.where(mine, SYNC_PERM.fwd(ids.reshape(-1).astype(jnp.uint32)),
+                       jnp.uint32(SENTINEL))
+    hsorted = jnp.sort(hashed)
+    n = hsorted.shape[0]
+    cap_in = dplan.in_capacity
+    valid = hsorted != jnp.uint32(SENTINEL)
+    is_head = jnp.concatenate([jnp.ones((1,), bool),
+                               hsorted[1:] != hsorted[:-1]]) & valid
+    pos = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    uniq = jnp.full((cap_in,), SENTINEL, jnp.uint32)
+    uniq = uniq.at[jnp.where(is_head & (pos < cap_in), pos, cap_in)].set(
+        hsorted, mode="drop")
+    rows = (SYNC_PERM.inv(uniq).astype(jnp.int32) - v_start)
+    okr = uniq != jnp.uint32(SENTINEL)
+    safe_rows = jnp.clip(rows, 0, v_l - 1)
+    vals = grad[safe_rows].astype(jnp.float32) * okr[:, None]
+    chunk, ovf = sparse_allreduce_union(
+        SparseChunk(idx=uniq, val=vals), dplan, edges)
+    out_rows = (SYNC_PERM.inv(chunk.idx).astype(jnp.int32) - v_start)
+    ok = chunk.idx != jnp.uint32(SENTINEL)
+    dest = jnp.where(ok, out_rows, v_l)
+    synced = jnp.zeros((v_l + 1, d), jnp.float32).at[dest].set(
+        chunk.val * ok[:, None], mode="drop")[:-1]
+    return synced.astype(grad.dtype), ovf
+
+
+def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
+               hier_plan: Optional[DevicePlan],
+               sparse_plan: Optional[DevicePlan],
+               sparse_edges, token_ids) -> Tuple[Any, jax.Array]:
+    """Combine per-device grads into the grad of the global mean loss."""
+    spec = full_model_spec_tuples(cfg, mc.tp)
+    dp = float(mc.dp)
+    overflow = jnp.zeros((), jnp.int32)
+
+    def leaf_sync(path, g, s):
+        nonlocal overflow
+        if cfg.fsdp and any(d == "fsdp" for d in s):
+            return g / dp          # transpose already summed over data
+        if mode == "sparse" and path == ("emb",) and not cfg.tie_embeddings:
+            synced, ovf = sparse_sync_rows(
+                g, token_ids, mc, sparse_plan, sparse_edges)
+            overflow = overflow + ovf
+            return synced / dp
+        if mode in ("hier", "sparse") and hier_plan is not None and g.size >= mc.dp:
+            return _hier_allreduce_leaf(g, hier_plan) / dp
+        out = g
+        for a in mc.dp_axes:
+            out = lax.psum(out, a)
+        return out / dp
+
+    flat = _flatten_with_path(grads)
+    sflat = dict(_flatten_with_path(spec))
+    synced = [(p, leaf_sync(p, g, sflat[p])) for p, g in flat]
+    return _unflatten_from_path(grads, synced), overflow
+
+
+def _flatten_with_path(tree, prefix=()):
+    """Dict-structured flatten; non-dict values (arrays OR spec tuples) are
+    leaves — param/grad/spec trees here are dicts all the way down."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten_with_path(tree[k], prefix + (k,)))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def _unflatten_from_path(like, items):
+    d = dict(items)
+
+    def rb(t, prefix=()):
+        if isinstance(t, dict):
+            return {k: rb(v, prefix + (k,)) for k, v in t.items()}
+        return d[prefix]
+    return rb(like)
+
+
+def _sharded_grad_norm(grads, cfg: ModelConfig, mc: MeshCtx) -> jax.Array:
+    """Global grad norm with sharding-aware reduction (each distinct param
+    element counted exactly once; grads are already data-synced)."""
+    spec = full_model_spec_tuples(cfg, mc.tp)
+    sflat = dict(_flatten_with_path(spec))
+    total = jnp.zeros((), jnp.float32)
+    for path, g in _flatten_with_path(grads):
+        sq = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        dims = sflat[path]
+        if any(d == "model" for d in dims):
+            sq = lax.psum(sq, mc.tp_axis)
+        if cfg.fsdp and any(d == "fsdp" for d in dims):
+            for a in mc.dp_axes:
+                sq = lax.psum(sq, a)
+        total = total + sq
+    return jnp.sqrt(total)
+
+
+def init_cache_global(cfg: ModelConfig, mc: MeshCtx, b: int, max_seq: int,
+                      seq_sharded: bool = False):
+    """Global-shape cache pytree matching cache_pspec (host allocation)."""
+    from repro.models import ssm as SSM
+    tp = mc.tp
+    kvg = cfg.kv_local(tp) * tp
+    hd, npd = cfg.hd, cfg.n_periods
+    per = {}
+    for j, blk in enumerate(cfg.pattern):
+        if blk == "attn":
+            per[f"b{j}"] = {
+                "k": jnp.zeros((npd, b, max_seq, kvg, hd), cfg.dtype),
+                "v": jnp.zeros((npd, b, max_seq, kvg, hd), cfg.dtype)}
+        elif blk == "mamba":
+            dig = SSM.mamba_inner(cfg, tp) * tp
+            per[f"b{j}"] = {
+                "h": jnp.zeros((npd, b, dig, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((npd, b, cfg.ssm_conv - 1, dig), cfg.dtype)}
+        elif blk == "mlstm":
+            h, dk, dvl = SSM.mlstm_dims(cfg, tp)
+            per[f"b{j}"] = {
+                "S": jnp.zeros((npd, b, h, dk, dvl * tp), jnp.float32),
+                "N": jnp.zeros((npd, b, h, dk), jnp.float32),
+                "m": jnp.zeros((npd, b, h), jnp.float32)}
+        elif blk == "slstm":
+            dh = cfg.d_model // cfg.n_heads
+            per[f"b{j}"] = tuple(
+                jnp.zeros((npd, b, cfg.n_heads, dh), jnp.float32)
+                for _ in range(4))
+    return per
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
+                    opt: Optional[AdamW] = None,
+                    dp_degrees: Optional[Dict[str, Tuple[int, ...]]] = None,
+                    aux_weight: float = 0.01, donate: bool = True,
+                    microbatch: int = 1,
+                    sparse_tokens_hint: Optional[int] = None):
+    """Returns (step_fn, specs) — step_fn is jit-compiled with shardings.
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    batch dict: tokens, labels [+ img_embeds / enc_frames].
+
+    microbatch > 1 splits the per-device batch into that many accumulation
+    steps (lax.scan) — bounds activation / MoE-dispatch memory; gradients
+    are synced once per step, after accumulation (so the paper's allreduce
+    sees the full-batch sparsity union, as in its mini-batch use case).
+    """
+    mc = mesh_ctx(mesh)
+    ax = mc.axis_ctx(cfg)
+    opt = opt or AdamW()
+    pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    dspec = P(mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0])
+
+    sparse_plan = sparse_edges = None
+    hier_plan = None
+    if sync in ("hier", "sparse"):
+        hier_plan = default_dp_plan(mc, 8, 8, dp_degrees)
+    if sync == "sparse":
+        v_l = T.padded_vocab(cfg, mc.tp) // mc.tp
+        # in capacity: unique local rows <= min(tokens/device, vocab shard).
+        # Sizing to the actual batch sparsity is what makes the sparse path
+        # win (SPerf H1: worst-case capacities moved MORE bytes than ring).
+        cin = int(min(v_l, sparse_tokens_hint or (1 << 16)))
+        cin = (cin + 7) // 8 * 8
+        cout = (min(v_l, cin * mc.dp) + 7) // 8 * 8
+        sparse_plan = make_device_plan(
+            [(a, mesh.shape[a]) for a in mc.dp_axes],
+            dp_degrees or {a: (mesh.shape[a],) for a in mc.dp_axes},
+            in_capacity=cin, out_capacity=cout)
+        sparse_edges = [jnp.asarray(e) for e in sparse_plan.edges_arrays()]
+
+    opt_pspec = AdamWState(step=P(), m=pspec, v=pspec)
+    batch_specs = {"tokens": dspec, "labels": dspec}
+    if cfg.img_tokens:
+        batch_specs["img_embeds"] = dspec
+    if cfg.enc_layers:
+        batch_specs["enc_frames"] = dspec
+
+    edge_specs = tuple(P(*mc.dp_axes, None) for _ in (sparse_edges or ()))
+
+    def body(params, opt_state, batch, *edges):
+        tokens, labels = batch["tokens"], batch["labels"]
+
+        def loss_fn(p, mb):
+            loss, aux = T.forward_loss(
+                p, mb["tokens"], mb["labels"], cfg, ax,
+                extra_embeds=mb.get("img_embeds"),
+                enc_frames=mb.get("enc_frames"))
+            return loss + aux_weight * aux, (loss, aux)
+
+        if microbatch == 1:
+            grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            mb_batch = {k: v.reshape((microbatch, v.shape[0] // microbatch)
+                                     + v.shape[1:])
+                        for k, v in batch.items()}
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                g, (l, a) = jax.grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss, aux = loss / microbatch, aux / microbatch
+        grads, overflow = sync_grads(grads, cfg, mc, sync, hier_plan,
+                                     sparse_plan, edges, tokens)
+        gnorm = _sharded_grad_norm(grads, cfg, mc)
+        new_params, new_opt, _ = opt.update(grads, opt_state, params,
+                                            gnorm=gnorm)
+        metrics = {"loss": lax.pmean(loss, mc.dp_axes),
+                   "aux": lax.pmean(aux, mc.dp_axes), "gnorm": gnorm,
+                   "sync_overflow": overflow}
+        return new_params, new_opt, metrics
+
+    sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, opt_pspec, batch_specs) + edge_specs,
+        out_specs=(pspec, opt_pspec,
+                   {"loss": P(), "aux": P(), "gnorm": P(),
+                    "sync_overflow": P()}),
+        check_vma=False)
+
+    def step(params, opt_state, batch):
+        args = (params, opt_state, batch) + tuple(sparse_edges or ())
+        return sm(*args)
+
+    mspec = {"loss": P(), "aux": P(), "gnorm": P(), "sync_overflow": P()}
+    jit_kw = dict(
+        in_shardings=(_ns(mesh, pspec), _ns(mesh, opt_pspec),
+                      _ns(mesh, batch_specs)),
+        out_shardings=(_ns(mesh, pspec), _ns(mesh, opt_pspec),
+                       _ns(mesh, mspec)))
+    if donate:
+        jit_kw["donate_argnums"] = (0, 1)
+    return jax.jit(step, **jit_kw), dict(params=pspec, opt=opt_pspec,
+                                         batch=batch_specs)
+
+
+def _ns(mesh: Mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def cache_pspec(cfg: ModelConfig, mc: MeshCtx, seq_sharded: bool):
+    """PartitionSpec tree mirroring transformer.init_cache."""
+    dp = mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0]
+    bspec = None if seq_sharded else dp
+    sspec = "data" if seq_sharded else None
+    per = {}
+    for j, blk in enumerate(cfg.pattern):
+        if blk == "attn":
+            kv = "model" if cfg.n_kv >= mc.tp else "model"
+            per[f"b{j}"] = {"k": P(None, bspec, sspec, "model", None),
+                            "v": P(None, bspec, sspec, "model", None)}
+        elif blk == "mamba":
+            per[f"b{j}"] = {"h": P(None, bspec, "model", None),
+                            "conv": P(None, bspec, None, "model")}
+        elif blk == "mlstm":
+            per[f"b{j}"] = {"S": P(None, bspec, None, None, "model"),
+                            "N": P(None, bspec, None, None),
+                            "m": P(None, bspec, None)}
+        elif blk == "slstm":
+            per[f"b{j}"] = tuple(P(None, bspec, None, None) for _ in range(4))
+    return per
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, max_seq: int):
+    """serve prefill: (params, batch) -> (local logits, cache)."""
+    mc = mesh_ctx(mesh)
+    ax = mc.axis_ctx(cfg)
+    pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    dp = mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0]
+    dspec = P(dp)
+    batch_specs = {"tokens": dspec}
+    if cfg.img_tokens:
+        batch_specs["img_embeds"] = dspec
+    if cfg.enc_layers:
+        batch_specs["enc_frames"] = dspec
+
+    def body(params, batch):
+        return T.forward_prefill(params, batch["tokens"], cfg, ax, max_seq,
+                                 enc_frames=batch.get("enc_frames"),
+                                 extra_embeds=batch.get("img_embeds"))
+
+    cspec = cache_pspec(cfg, mc, False)
+    sm = shard_map(body, mesh=mesh, in_specs=(pspec, batch_specs),
+                   out_specs=(P(dp, "model"), cspec),
+                   check_vma=False)
+    jit_kw = dict(in_shardings=(_ns(mesh, pspec), _ns(mesh, batch_specs)),
+                  out_shardings=(_ns(mesh, P(dp, "model")), _ns(mesh, cspec)))
+    return jax.jit(sm, **jit_kw), dict(params=pspec, batch=batch_specs)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *, seq_sharded: bool = False,
+                     seq_shards: int = 1, serve2d: bool = False):
+    """serve decode: (params, token, pos, cache[, cross_cache]) ->
+    (local logits, new cache)."""
+    mc = mesh_ctx(mesh)
+    ax = mc.axis_ctx(cfg)
+    pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    dp = mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0]
+    bspec = P(None) if seq_sharded else P(dp)
+    cspec = cache_pspec(cfg, mc, seq_sharded)
+    lspec = P(None, "model") if seq_sharded else P(dp, "model")
+
+    cross_spec = None
+    if cfg.enc_layers:
+        cross_spec = (P(None, dp, None, "model", None),
+                      P(None, dp, None, "model", None))
+
+    mesh_sizes = dict(mesh.shape)
+
+    def body(params, token, pos, cache, *cross):
+        cc = cross[0] if cross else None
+        return T.forward_decode(
+            params, token, pos, cache, cfg, ax,
+            seq_axis="data" if seq_sharded else None,
+            seq_shards=seq_shards, cross_cache=cc,
+            serve2d=serve2d, mesh_sizes=mesh_sizes)
+
+    in_specs = (pspec, bspec, bspec, cspec)
+    if cfg.enc_layers:
+        in_specs = in_specs + (cross_spec,)
+    sm = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(lspec, cspec), check_vma=False)
+    jit_kw = dict(in_shardings=tuple(_ns(mesh, s) for s in in_specs),
+                  out_shardings=(_ns(mesh, lspec), _ns(mesh, cspec)))
+    return jax.jit(sm, **jit_kw), dict(params=pspec, cache=cspec)

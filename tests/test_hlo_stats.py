@@ -1,0 +1,75 @@
+"""HLO parsing units: collective classification, loop trip recovery, dots."""
+import textwrap
+
+from repro.launch.hlo_stats import (_shape_bytes, collective_stats, dot_flops,
+                                    total_collective_bytes)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8]{0}") == 16
+    assert _shape_bytes("(f32[4,4], bf16[2,2])") == 64 + 8
+    assert _shape_bytes("pred[10]") == 10
+
+
+HLO = textwrap.dedent("""\
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[64]{0} all-gather(%slice), replica_groups=[4,4]<=[16], dimensions={0}
+  %rs = f32[16]{0} reduce-scatter(%ar), replica_groups={{0,1,2,3}}, to_apply=%add
+  %a2a = (f32[16]{0}, f32[16]{0}, f32[16]{0}, f32[16]{0}) all-to-all(%x, %y, %z, %w), replica_groups={{0,1,2,3}}
+  %cp = f32[64]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+}
+""")
+
+
+def test_collective_classification():
+    st = collective_stats(HLO)
+    assert st["all-reduce"]["bytes"] == 2 * 256 * 3 / 4
+    assert st["all-gather"]["bytes"] == 256 * 3 / 4
+    assert st["reduce-scatter"]["bytes"] == 64 * 3
+    assert st["all-to-all"]["bytes"] == 4 * 64 * 3 / 4   # tuple summed
+    assert st["collective-permute"]["bytes"] == 256
+    assert total_collective_bytes(st) > 0
+
+
+LOOP_HLO = textwrap.dedent("""\
+%cond (s: (s32[], f32[64])) -> pred[] {
+  %s = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%bodyfn (s: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %s = (s32[], f32[64]) parameter(0)
+  %v = f32[64]{0} get-tuple-element(%s), index=1
+  %ar = f32[64]{0} all-reduce(%v), replica_groups={{0,1}}, to_apply=%add
+  %w = f32[8,8]{1,0} parameter(1)
+  %d = f32[8,8]{1,0} dot(%w, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (p0: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p0 = (s32[], f32[64]) parameter(0)
+  ROOT %wh = (s32[], f32[64]) while(%p0), condition=%cond, body=%bodyfn
+}
+""")
+
+
+def test_loop_trip_multiplier():
+    st = collective_stats(LOOP_HLO, default_trip=99)
+    # trip recovered from the condition constant (7), not the default
+    assert st["all-reduce"]["count"] == 7
+    assert st["all-reduce"]["bytes"] == 7 * 2 * 256 * 1 / 2
+    corrected, flat = dot_flops(LOOP_HLO, default_trip=99)
+    assert flat == 2 * 8 * 8 * 8
+    assert corrected == 7 * flat
+
+
+def test_done_ops_not_double_counted():
+    hlo = ("ENTRY %e (p: f32[8]) -> f32[8] {\n"
+           "  %s = f32[8]{0} all-reduce-start(%p), replica_groups={{0,1}}\n"
+           "  %d = f32[8]{0} all-reduce-done(%s)\n}\n")
+    st = collective_stats(hlo)
+    assert st["all-reduce"]["count"] == 1

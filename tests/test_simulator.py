@@ -1,0 +1,133 @@
+"""Message-level simulator vs dense oracle; replication; property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.replication import (contribution_weights,
+                                    expected_tolerated_failures,
+                                    simulate_random_failures)
+from repro.core.simulator import (DeadLogicalNode, SimSparseAllreduce,
+                                  dense_oracle)
+from repro.core.sparse_vec import HashPerm
+from repro.core.topology import ButterflyPlan, ordered_factorizations
+
+
+def _workload(rng, m, r=2000, alpha=1.5, max_n=120):
+    """Power-law-ish out/in sets per node."""
+    out_i, out_v, in_i = [], [], []
+    for _ in range(m):
+        n = rng.randint(5, max_n)
+        # zipf-distributed indices (duplicates allowed: multiple updates)
+        oi = (rng.zipf(alpha, n) % r).astype(np.uint32)
+        out_i.append(oi)
+        out_v.append(rng.randn(n))
+        ni = rng.randint(5, max_n)
+        in_i.append(rng.choice(r, ni, replace=False).astype(np.uint32))
+    return out_i, out_v, in_i
+
+
+@pytest.mark.parametrize("m,degs", [(8, (4, 2)), (8, (2, 2, 2)), (8, (8,)),
+                                    (12, (3, 2, 2)), (16, (4, 4)),
+                                    (6, (6,)), (6, (2, 3))])
+def test_sim_matches_oracle(m, degs):
+    rng = np.random.RandomState(m * 100 + len(degs))
+    out_i, out_v, in_i = _workload(rng, m)
+    sim = SimSparseAllreduce(ButterflyPlan(m, degs), perm=HashPerm.make(1))
+    sim.config(out_i, in_i)
+    got = sim.reduce(out_v)
+    want = dense_oracle(out_i, out_v, in_i, sim.perm)
+    for n in range(m):
+        np.testing.assert_allclose(got[n], want[n], rtol=1e-9, atol=1e-12)
+
+
+def test_config_once_reduce_many():
+    """Paper property #2: one config, many reduces with fresh values."""
+    rng = np.random.RandomState(0)
+    out_i, out_v, in_i = _workload(rng, 8)
+    sim = SimSparseAllreduce(ButterflyPlan(8, (4, 2)), perm=HashPerm.make(2))
+    sim.config(out_i, in_i)
+    for it in range(3):
+        vals = [rng.randn(len(o)) for o in out_i]
+        got = sim.reduce(vals)
+        want = dense_oracle(out_i, vals, in_i, sim.perm)
+        for n in range(8):
+            np.testing.assert_allclose(got[n], want[n], rtol=1e-9)
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([(m, d) for m in (4, 8, 12)
+                        for d in ordered_factorizations(m)]),
+       st.floats(1.1, 3.0))
+@settings(max_examples=25, deadline=None)
+def test_sim_oracle_property(seed, md, alpha):
+    m, degs = md
+    rng = np.random.RandomState(seed)
+    out_i, out_v, in_i = _workload(rng, m, alpha=alpha, max_n=60)
+    sim = SimSparseAllreduce(ButterflyPlan(m, degs),
+                             perm=HashPerm.make(seed))
+    sim.config(out_i, in_i)
+    got = sim.reduce(out_v)
+    want = dense_oracle(out_i, out_v, in_i, sim.perm)
+    for n in range(m):
+        np.testing.assert_allclose(got[n], want[n], rtol=1e-9, atol=1e-12)
+
+
+def test_value_width():
+    rng = np.random.RandomState(3)
+    out_i, _, in_i = _workload(rng, 8)
+    out_v = [rng.randn(len(o), 5) for o in out_i]
+    sim = SimSparseAllreduce(ButterflyPlan(8, (4, 2)), perm=HashPerm.make(4),
+                             value_width=5)
+    sim.config(out_i, in_i)
+    got = sim.reduce(out_v)
+    want = dense_oracle(out_i, out_v, in_i, sim.perm, width=5)
+    for n in range(8):
+        np.testing.assert_allclose(got[n], want[n], rtol=1e-9)
+
+
+@pytest.mark.parametrize("dead", [set(), {0}, {9}, {2, 11}, {0, 1, 2}])
+def test_replication_tolerates_failures(dead):
+    rng = np.random.RandomState(5)
+    out_i, out_v, in_i = _workload(rng, 8)
+    sim = SimSparseAllreduce(ButterflyPlan(8, (2, 4)), replication=2,
+                             dead=dead, perm=HashPerm.make(5))
+    sim.config(out_i, in_i)
+    got = sim.reduce(out_v)
+    want = dense_oracle(out_i, out_v, in_i, sim.perm)
+    for n in range(8):
+        np.testing.assert_allclose(got[n], want[n], rtol=1e-9)
+
+
+def test_whole_replica_group_dead_raises():
+    with pytest.raises(DeadLogicalNode):
+        SimSparseAllreduce(ButterflyPlan(8, (4, 2)), replication=2,
+                           dead={3, 11})
+
+
+def test_replication_costs_more_but_not_rx(recwarn):
+    """Table II: replication ~doubles traffic; runtime hit is moderate."""
+    rng = np.random.RandomState(6)
+    out_i, out_v, in_i = _workload(rng, 8)
+    t = {}
+    for r in (1, 2):
+        sim = SimSparseAllreduce(ButterflyPlan(8, (4, 2)), replication=r,
+                                 perm=HashPerm.make(6))
+        sim.config(out_i, in_i)
+        sim.reduce(out_v)
+        t[r] = (sim.reduce_stats.reduce_time_s, sim.reduce_stats.total_bytes)
+    assert t[2][1] == pytest.approx(2 * t[1][1])
+    assert t[2][0] < 4 * t[1][0]
+
+
+def test_birthday_bound():
+    m = 64
+    bound = expected_tolerated_failures(m, 2)
+    assert 8 < bound < 13          # ~sqrt(pi*64/2) ~ 10
+    p_ok = simulate_random_failures(m, 2, num_failures=int(bound), trials=400)
+    assert 0.2 < p_ok < 0.8        # the bound is the ~50% point
+    assert simulate_random_failures(m, 2, 1, trials=200) == 1.0
+
+
+def test_contribution_weights():
+    w = contribution_weights(8, 2, dead={1})
+    assert w.sum() == 4 and w[5] == 1.0 and w[1] == 0.0

@@ -1,0 +1,138 @@
+"""Sparse vector substrate: hash perm, coalescing, chunks, buckets."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse_vec import (SENTINEL, HashPerm, SparseChunk,
+                                   bucket_partition, merge_add, merge_add_np,
+                                   segment_compact, sort_chunk,
+                                   sort_coalesce_np, tree_sum, tree_sum_np)
+
+
+@given(st.integers(0, 2**31), st.lists(st.integers(0, 2**32 - 1),
+                                       min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_hash_perm_bijection(seed, idx):
+    perm = HashPerm.make(seed)
+    a = np.array(idx, np.uint32)
+    h = perm.fwd_np(a)
+    np.testing.assert_array_equal(perm.inv_np(h), a)
+
+
+def test_hash_perm_device_matches_numpy():
+    perm = HashPerm.make(3)
+    a = np.arange(1000, dtype=np.uint32) * 977
+    np.testing.assert_array_equal(np.asarray(perm.fwd(jnp.asarray(a))),
+                                  perm.fwd_np(a))
+    np.testing.assert_array_equal(np.asarray(perm.inv(perm.fwd(jnp.asarray(a)))),
+                                  a)
+
+
+def test_hash_perm_balances_ranges():
+    """The paper's §III-A argument: hashed power-law ids split evenly."""
+    perm = HashPerm.make(0)
+    # heavily clustered ids (hubs at low ids, Zipf-ish repeats)
+    rng = np.random.RandomState(0)
+    ids = (rng.zipf(1.3, 20000) % 5000).astype(np.uint32)
+    h = perm.fwd_np(np.unique(ids)).astype(np.uint64)
+    k = 8
+    counts = np.histogram(h, bins=k, range=(0, 2**32))[0]
+    assert counts.max() / max(counts.min(), 1) < 1.5
+
+
+@given(st.lists(st.tuples(st.integers(0, 99), st.floats(-10, 10)),
+                min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_sort_coalesce_np(pairs):
+    idx = np.array([p[0] for p in pairs], np.uint32)
+    val = np.array([p[1] for p in pairs], np.float64)
+    u, s = sort_coalesce_np(idx, val)
+    dense = np.zeros(100)
+    np.add.at(dense, idx.astype(int), val)
+    assert np.array_equal(u, np.unique(idx))
+    np.testing.assert_allclose(s, dense[u.astype(int)], rtol=1e-12, atol=1e-12)
+
+
+def test_tree_sum_np_matches_dense():
+    rng = np.random.RandomState(1)
+    parts = []
+    dense = np.zeros(500)
+    for _ in range(13):
+        i = rng.randint(0, 500, 60).astype(np.uint32)
+        v = rng.randn(60)
+        np.add.at(dense, i.astype(int), v)
+        parts.append(sort_coalesce_np(i, v))
+    u, s = tree_sum_np(parts)
+    np.testing.assert_allclose(s, dense[u.astype(int)], rtol=1e-9)
+    assert len(u) == np.count_nonzero(dense)
+
+
+def _rand_chunk(rng, c, r=200, w=0):
+    n = rng.randint(1, c + 1)
+    idx = np.full(c, 0xFFFFFFFF, np.uint32)
+    idx[:n] = np.sort(rng.randint(0, r, n).astype(np.uint32))
+    shape = (c,) if w == 0 else (c, w)
+    val = rng.randn(*shape).astype(np.float32)
+    mask = idx != 0xFFFFFFFF
+    val = val * (mask[:, None] if w else mask)
+    return SparseChunk(idx=jnp.asarray(idx), val=jnp.asarray(val))
+
+
+@pytest.mark.parametrize("w", [0, 3])
+def test_segment_compact_and_to_dense(w):
+    rng = np.random.RandomState(2)
+    ch = _rand_chunk(rng, 64, w=w)
+    out = segment_compact(ch, 64)
+    d1 = np.asarray(ch.to_dense(200))
+    d2 = np.asarray(out.to_dense(200))
+    np.testing.assert_allclose(d1, d2, rtol=1e-6, atol=1e-6)
+    idx = np.asarray(out.idx)
+    valid = idx != 0xFFFFFFFF
+    assert np.all(np.diff(idx[valid].astype(np.int64)) > 0)  # strictly sorted
+
+
+@pytest.mark.parametrize("w", [0, 2])
+def test_merge_add_matches_dense(w):
+    rng = np.random.RandomState(3)
+    a, b = _rand_chunk(rng, 48, w=w), _rand_chunk(rng, 80, w=w)
+    out = merge_add(a, b, 160)
+    np.testing.assert_allclose(
+        np.asarray(out.to_dense(200)),
+        np.asarray(a.to_dense(200)) + np.asarray(b.to_dense(200)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_tree_sum_device():
+    rng = np.random.RandomState(4)
+    chunks = [_rand_chunk(rng, 32) for _ in range(7)]
+    out = tree_sum(chunks, out_capacity=256)
+    dense = sum(np.asarray(c.to_dense(200)) for c in chunks)
+    np.testing.assert_allclose(np.asarray(out.to_dense(200)), dense,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bucket_partition_ranges_and_overflow():
+    rng = np.random.RandomState(5)
+    ch = _rand_chunk(rng, 64, r=1000)
+    edges = jnp.asarray(np.array([0, 250, 500, 750, 1000], np.uint32))
+    buckets, ovf = bucket_partition(ch, edges, 4, 32)
+    assert int(ovf) == 0
+    bi = np.asarray(buckets.idx)
+    for b in range(4):
+        v = bi[b][bi[b] != 0xFFFFFFFF]
+        assert np.all((v >= b * 250) & (v < (b + 1) * 250))
+    # total mass preserved (buckets are zero-padded to 4x32)
+    bv = np.asarray(buckets.val).ravel()
+    cv = np.asarray(ch.val).ravel()
+    np.testing.assert_allclose(np.sort(bv[bv != 0]), np.sort(cv[cv != 0]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(bv.sum(), cv.sum(), rtol=1e-5)
+
+
+def test_bucket_partition_overflow_counted():
+    idx = jnp.asarray(np.arange(16, dtype=np.uint32))  # all in bucket 0
+    val = jnp.ones((16,), jnp.float32)
+    edges = jnp.asarray(np.array([0, 1000, 2000], np.uint32))
+    _, ovf = bucket_partition(SparseChunk(idx=idx, val=val), edges, 2, 8)
+    assert int(ovf) == 8

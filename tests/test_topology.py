@@ -1,0 +1,102 @@
+"""Butterfly topology: mixed-radix structure, packet model, tuner."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.netmodel import EC2_2013, TPU_ICI
+from repro.core.topology import (SPACE, ButterflyPlan, binary_plan,
+                                 ordered_factorizations, roundrobin_plan,
+                                 tune)
+
+
+def factorization_strategy():
+    return st.sampled_from(
+        [(m, degs) for m in (4, 8, 12, 16, 24, 64)
+         for degs in ordered_factorizations(m)])
+
+
+@given(factorization_strategy())
+@settings(max_examples=60, deadline=None)
+def test_groups_partition_and_ranges_nest(md):
+    m, degs = md
+    plan = ButterflyPlan(m, degs)
+    for l in range(plan.depth):
+        groups = plan.axis_index_groups(l)
+        flat = sorted(x for g in groups for x in g)
+        assert flat == list(range(m))               # partition of nodes
+        for g in groups:
+            assert len(g) == plan.degrees[l]
+    # final ranges tile the space in node order
+    finals = [plan.range_at(n, plan.depth) for n in range(m)]
+    assert finals[0][0] == 0 and finals[-1][1] == SPACE
+    for a, b in zip(finals, finals[1:]):
+        assert a[1] == b[0]
+    # each node's range nests down the layers
+    for n in range(m):
+        prev = (0, SPACE)
+        for l in range(plan.depth + 1):
+            lo, hi = plan.range_at(n, l)
+            assert prev[0] <= lo and hi <= prev[1]
+            prev = (lo, hi)
+
+
+def test_group_member_ranges_are_the_split():
+    plan = ButterflyPlan(12, (3, 4))
+    for n in range(12):
+        for l in range(2):
+            edges = plan.edges_at(n, l)
+            members = plan.group_members(n, l)
+            for t, mem in enumerate(members):
+                lo, hi = plan.range_at(mem, l + 1)
+                assert lo == edges[t] and hi == edges[t + 1]
+
+
+def test_degenerate_plans():
+    assert roundrobin_plan(8).degrees == (8,)
+    assert binary_plan(8).degrees == (2, 2, 2)
+    with pytest.raises(ValueError):
+        binary_plan(12)
+    with pytest.raises(ValueError):
+        ButterflyPlan(8, (3, 3))
+
+
+def test_packet_model_compression_monotone():
+    """Fig 5: packet sizes decay with depth (index collisions compress)."""
+    plan = ButterflyPlan(64, (2,) * 6)
+    counts = plan.expected_counts(12.1e6, 60e6)
+    assert all(a >= b for a, b in zip(counts, counts[1:]))
+    pkts = plan.packet_bytes(12.1e6, 60e6)
+    assert all(a >= b for a, b in zip(pkts, pkts[1:]))
+
+
+def test_tuner_reproduces_paper_fig6():
+    """Twitter graph @64 nodes: hybrid (16x4-family) beats round-robin and
+    binary butterfly; web graph: round-robin competitive (paper SVI-B)."""
+    t = {str(p): p.modeled_time(12.1e6, 60e6)
+         for p in [ButterflyPlan(64, d)
+                   for d in [(16, 4), (64,), (2,) * 6, (8, 8)]]}
+    assert t["16x4"] < t["64"]
+    assert t["16x4"] < t["2x2x2x2x2x2"]
+    best = tune(64, 12.1e6, 60e6)
+    assert 2 <= len(best.degrees) <= 4          # heterogeneous hybrid wins
+    assert best.degrees[0] >= best.degrees[-1]  # degree decreases with depth
+    # yahoo: bigger data => round-robin closer to optimal
+    ty = {str(p): p.modeled_time(48e6, 1.6e9)
+          for p in [ButterflyPlan(64, d) for d in [(16, 4), (64,), (2,) * 6]]}
+    assert ty["64"] < ty["2x2x2x2x2x2"]
+
+
+def test_tuner_tpu_fabric_prefers_fewer_layers_for_big_payloads():
+    best = tune(16, 1e7, 1e8, fabric=TPU_ICI, serial_nic=False)
+    assert math.prod(best.degrees) == 16
+
+
+@given(st.sampled_from([4, 8, 16, 32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_ordered_factorizations_complete(m):
+    facs = ordered_factorizations(m)
+    assert all(math.prod(f) == m for f in facs)
+    assert len(set(facs)) == len(facs)
+    assert (m,) in facs
