@@ -239,6 +239,56 @@ def bench_kernels() -> List[Row]:
     return rows
 
 
+def bench_merge_modes() -> List[Row]:
+    """Per-layer merge-stage timing, both ``merge`` modes of the union
+    allreduce: ``sort`` (concat + full argsort + segment-compact) vs
+    ``fused`` (Pallas rank-merge + compact + one-hot scatter-add in one
+    pass — kernels.ops.merge_sorted_runs).  Workload: k sorted power-law
+    runs, exactly what arrives at a butterfly layer after all_to_all.
+    On CPU the Pallas path runs in interpret mode (correctness numbers;
+    perf is TPU-only)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import sparse_vec as sv
+    from repro.kernels import ops
+    rows = []
+    rng = np.random.RandomState(0)
+    perm = HashPerm.make(3)
+    for k, cap in [(2, 2048), (4, 1024), (8, 512), (16, 256)]:
+        idx = np.full((k, cap), 0xFFFFFFFF, np.uint32)
+        val = np.zeros((k, cap), np.float32)
+        for r in range(k):
+            raw = (rng.zipf(1.5, cap * 2) % 100_000).astype(np.uint32)
+            h = np.unique(perm.fwd_np(raw))
+            n = min(len(h), cap - rng.randint(0, cap // 4))
+            idx[r, :n] = h[:n]
+            val[r, :n] = rng.randn(n)
+        j_idx, j_val = jnp.asarray(idx), jnp.asarray(val)
+        out_cap = k * cap
+
+        # return BOTH outputs or jit dead-code-eliminates the value merge
+        def chunk_pair(c):
+            return c.idx, c.val
+
+        f_sort = jax.jit(lambda i, v: chunk_pair(sv.segment_compact(
+            sv.concat_sorted_groups(i, v), out_cap)))
+        f_fused = jax.jit(lambda i, v: chunk_pair(ops.merge_sorted_runs(
+            i, v, out_cap)[0]))
+
+        def run(fn):
+            oi, ov = fn(j_idx, j_val)
+            oi.block_until_ready(), ov.block_until_ready()
+
+        run(f_sort), run(f_fused)                     # compile
+        rows.append((f"merge/sort_k{k}_cap{cap}",
+                     _timeit(lambda: run(f_sort)),
+                     "merge=sort (concat+argsort+compact)"))
+        rows.append((f"merge/fused_k{k}_cap{cap}",
+                     _timeit(lambda: run(f_fused)),
+                     "merge=fused (rank-merge Pallas; interpret off-TPU)"))
+    return rows
+
+
 def bench_grad_sync_crossover() -> List[Row]:
     """Sparse vs dense embedding-grad sync bytes vs batch size (the paper's
     mini-batch sparsity argument, on gemma3's 262k vocab)."""
@@ -268,5 +318,6 @@ ALL_BENCHES = [
     bench_fig8_scaling,
     bench_fig9_pagerank_comparison,
     bench_kernels,
+    bench_merge_modes,
     bench_grad_sync_crossover,
 ]

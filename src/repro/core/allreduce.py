@@ -138,16 +138,25 @@ def _round8(x: int) -> int:
 
 def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
                            edges: Sequence[jax.Array],
-                           use_kernel: bool = False
+                           use_kernel: bool = False,
+                           merge: str = "sort"
                            ) -> Tuple[SparseChunk, jax.Array]:
     """Nested butterfly sparse allreduce; every node gets the full union sum.
 
     ``chunk``: this device's sorted SparseChunk (hashed indices).
     ``edges``: per-stage range-edge arrays, each shaped [1,...,1, k_l+1]
     after shard_map slicing — i.e. this device's own edges.
+    ``merge`` selects the per-layer merge of the k sorted runs arriving at
+    each butterfly layer: ``"sort"`` concatenates and fully re-sorts before
+    segment-compacting; ``"fused"`` rank-merges the already-sorted runs,
+    compacts duplicates, and scatter-adds in one pass via the Pallas
+    pipeline in ``repro.kernels.ops.merge_sorted_runs`` (interpret-mode
+    fallback off-TPU).  Both produce identical results.
     Returns (union chunk of capacity ``out_capacity`` per device replica,
     overflow count — entries dropped to capacity anywhere in the network).
     """
+    if merge not in ("sort", "fused"):
+        raise ValueError(f"merge must be 'sort' or 'fused', got {merge!r}")
     overflow = jnp.zeros((), jnp.int32)
 
     # ---- down: scatter-reduce through the layers --------------------------
@@ -162,10 +171,17 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
         r_val = lax.all_to_all(buckets.val, st.axis_name, split_axis=0,
                                concat_axis=0,
                                axis_index_groups=list(map(list, st.axis_index_groups)))
-        cat = concat_sorted_groups(r_idx, r_val)
-        from .sparse_vec import compact_overflow
-        overflow = overflow + compact_overflow(cat, st.merged_capacity)
-        chunk = segment_compact(cat, st.merged_capacity, use_kernel=use_kernel)
+        if merge == "fused":
+            from repro.kernels import ops as _kops
+            chunk, movf = _kops.merge_sorted_runs(r_idx, r_val,
+                                                  st.merged_capacity)
+            overflow = overflow + movf
+        else:
+            cat = concat_sorted_groups(r_idx, r_val)
+            from .sparse_vec import compact_overflow
+            overflow = overflow + compact_overflow(cat, st.merged_capacity)
+            chunk = segment_compact(cat, st.merged_capacity,
+                                    use_kernel=use_kernel)
 
     # ---- up: allgather back through the same nodes (nested) ---------------
     for st in reversed(plan.stages):
@@ -245,15 +261,18 @@ def dense_allreduce_binary(x: jax.Array, axis_name: str, axis_size: int) -> jax.
 
 def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
                         idx: jax.Array, val: jax.Array,
-                        use_kernel: bool = False):
+                        use_kernel: bool = False, merge: str = "sort"):
     """Convenience wrapper: shard (idx, val) over the plan's axes and run.
 
     idx: uint32 [M, C] hashed *sorted* indices per node (SENTINEL padded)
     val: [M, C] or [M, C, W]
+    ``merge``: per-layer merge strategy ("sort" | "fused"); see
+    :func:`sparse_allreduce_union`.
     Returns (idx [M, out_cap], val [M, out_cap(,W)], overflow [M]).
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     axis_names = tuple(n for n, _ in plan.axes)
     shape = tuple(s for _, s in plan.axes)
@@ -268,7 +287,8 @@ def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
         i = i.reshape(i.shape[len(shape):])
         v = v.reshape(v.shape[len(shape):])
         chunk, ovf = sparse_allreduce_union(SparseChunk(idx=i, val=v), plan,
-                                            e, use_kernel=use_kernel)
+                                            e, use_kernel=use_kernel,
+                                            merge=merge)
         pad = (1,) * len(shape)
         return (chunk.idx.reshape(pad + chunk.idx.shape),
                 chunk.val.reshape(pad + chunk.val.shape),

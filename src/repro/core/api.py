@@ -33,7 +33,17 @@ class SparseAllreduce:
                  replication: int = 1, dead: Optional[Set[int]] = None,
                  fabric: Fabric = EC2_2013, seed: int = 0,
                  value_width: int = 1, mesh=None,
-                 expected_nnz: float = 1e5, index_range: float = 1e6):
+                 expected_nnz: float = 1e5, index_range: float = 1e6,
+                 merge: str = "sort"):
+        """``merge`` ("sort" | "fused") picks the per-butterfly-layer merge
+        used by the dynamic-index union path (:meth:`union_reduce`):
+        concatenate-and-resort, or the fused Pallas rank-merge pipeline
+        (``repro.kernels.ops.merge_sorted_runs``).  The planned ``reduce``
+        path freezes routing at ``config`` time and has no merge stage, so
+        the knob does not affect it."""
+        if merge not in ("sort", "fused"):
+            raise ValueError(f"merge must be 'sort' or 'fused', got {merge!r}")
+        self.merge = merge
         self.num_nodes = num_nodes
         if degrees == "auto":
             plan = tune(num_nodes, n0=expected_nnz, total_range=index_range,
@@ -52,6 +62,7 @@ class SparseAllreduce:
         self._reduce_fn = None
         self._u_cap = None
         self._in_lens = None
+        self._union_cache = {}
 
     # ------------------------------------------------------------------
     def config(self, out_indices: Sequence[np.ndarray],
@@ -106,6 +117,40 @@ class SparseAllreduce:
             vals[n, : len(out_values[n])] = out_values[n]
         out = np.asarray(self._reduce_fn(jnp.asarray(vals)))
         return [out[n, : self._in_lens[n]] for n in range(self.num_nodes)]
+
+    # ------------------------------------------------------------------
+    def union_reduce(self, idx, val, out_capacity: int,
+                     use_kernel: bool = False):
+        """Gather-all union sum with dynamic indices (the paper's mini-batch
+        mode) on a device mesh, honouring the ``merge`` knob.
+
+        idx: uint32 [num_nodes, C] *hashed, sorted*, SENTINEL-padded per-node
+        indices; val: [num_nodes, C] or [num_nodes, C, W].
+        Returns (idx [M, out_capacity], val, overflow [M]) — every node gets
+        the full union sum.  Requires a mesh of ``num_nodes`` devices.
+        The plan and compiled pipeline are cached per (shape, out_capacity,
+        use_kernel), so repeated same-shape calls pay tracing once.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from .allreduce import make_device_plan, run_union_allreduce
+        idx = jnp.asarray(idx)
+        val = jnp.asarray(val)
+        key = (idx.shape, val.shape, val.dtype, out_capacity, use_kernel)
+        fn = self._union_cache.get(key)
+        if fn is None:
+            mesh = self.mesh
+            if mesh is None:
+                mesh = jax.make_mesh((self.num_nodes,), ("nodes",))
+            axis = mesh.axis_names[0]
+            dplan = make_device_plan(
+                [(axis, self.num_nodes)], {axis: self.plan.degrees},
+                in_capacity=idx.shape[1], out_capacity=out_capacity)
+            fn = jax.jit(lambda i, v: run_union_allreduce(
+                mesh, dplan, i, v, use_kernel=use_kernel, merge=self.merge))
+            self._union_cache[key] = fn
+        return fn(idx, val)
 
     # ------------------------------------------------------------------
     @property

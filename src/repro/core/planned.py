@@ -156,7 +156,8 @@ class PlannedSparseAllreduce:
     def make_reduce_fn(self, mesh: jax.sharding.Mesh):
         """Jitted host entry: values [M, u_cap(,W)] -> [M, uin_cap(,W)]."""
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+
+        from repro.compat import shard_map
         shape = tuple(s for _, s in self.dplan.axes)
         axes = tuple(n for n, _ in self.dplan.axes)
         nax = len(shape)

@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import CompilerParams
 
 
 def _kernel(pos_ref, val_ref, out_ref, *, bm: int, bk: int):
@@ -70,8 +71,8 @@ def onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel",
-                                             "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "parallel",
+                                       "arbitrary")),
         interpret=interpret,
     )(pos_p, val_p)
     return out[:num_rows, :w]

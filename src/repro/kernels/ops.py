@@ -7,7 +7,7 @@ same BlockSpecs compile natively.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,20 +29,38 @@ def _compact_positions(idx: jax.Array, out_capacity: int):
     return pos, is_head
 
 
+def _compact_scatter_add(merged_idx: jax.Array, ranks: Optional[jax.Array],
+                         val: jax.Array, out_capacity: int
+                         ) -> Tuple[SparseChunk, jax.Array]:
+    """Shared tail of every compact pipeline: scatter the head index of each
+    duplicate group, then coalesce values with a single one-hot MXU matmul.
+
+    ``merged_idx``: sorted [C] uint32 stream; ``ranks``: position of value
+    row e within that stream (None when the rows are already in stream
+    order); ``val``: [C] or [C, W].  Rows whose compact position exceeds
+    ``out_capacity`` fall off the one-hot tiles (drop semantics).
+    Returns ``(chunk, n_unique)``.
+    """
+    pos, is_head = _compact_positions(merged_idx, out_capacity)
+    out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
+    out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
+        merged_idx, mode="drop")
+    final_pos = pos if ranks is None else pos[ranks]
+    v2 = val if val.ndim == 2 else val[:, None]
+    out_val = onehot_scatter_add(final_pos, v2, out_capacity,
+                                 interpret=INTERPRET).astype(val.dtype)
+    if val.ndim == 1:
+        out_val = out_val[:, 0]
+    return (SparseChunk(idx=out_idx, val=out_val),
+            jnp.sum(is_head.astype(jnp.int32)))
+
+
 def segment_compact(chunk: SparseChunk, out_capacity: Optional[int] = None
                     ) -> SparseChunk:
     """Kernel-backed coalesce of a sorted chunk (MXU one-hot scatter-add)."""
     out_capacity = out_capacity or chunk.capacity
-    pos, is_head = _compact_positions(chunk.idx, out_capacity)
-    out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
-    out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
-        chunk.idx, mode="drop")
-    val = chunk.val if chunk.val.ndim == 2 else chunk.val[:, None]
-    out_val = onehot_scatter_add(pos, val, out_capacity, interpret=INTERPRET)
-    out_val = out_val.astype(chunk.val.dtype)
-    if chunk.val.ndim == 1:
-        out_val = out_val[:, 0]
-    return SparseChunk(idx=out_idx, val=out_val)
+    out, _ = _compact_scatter_add(chunk.idx, None, chunk.val, out_capacity)
+    return out
 
 
 def merge_add(a: SparseChunk, b: SparseChunk,
@@ -63,21 +81,56 @@ def merge_add(a: SparseChunk, b: SparseChunk,
     merged_idx = jnp.zeros((ca + cb,), jnp.uint32)
     merged_idx = merged_idx.at[rank_a].set(a.idx)
     merged_idx = merged_idx.at[rank_b].set(b.idx)
-    pos, is_head = _compact_positions(merged_idx, out_capacity)
-    out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
-    out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
-        merged_idx, mode="drop")
     # entry e of (a ++ b) lands at compact position pos[rank_e]
     ranks = jnp.concatenate([rank_a, rank_b])
-    final_pos = pos[ranks]
-    val_a = a.val if a.val.ndim == 2 else a.val[:, None]
-    val_b = b.val if b.val.ndim == 2 else b.val[:, None]
-    cat = jnp.concatenate([val_a, val_b], axis=0)
-    out_val = onehot_scatter_add(final_pos, cat, out_capacity,
-                                 interpret=INTERPRET).astype(a.val.dtype)
-    if a.val.ndim == 1:
-        out_val = out_val[:, 0]
-    return SparseChunk(idx=out_idx, val=out_val)
+    cat = jnp.concatenate([a.val, b.val], axis=0)
+    out, _ = _compact_scatter_add(merged_idx, ranks, cat, out_capacity)
+    return out
+
+
+def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int
+                      ) -> Tuple[SparseChunk, jax.Array]:
+    """Fused k-way merge: rank-merge sorted runs, compact duplicate indices,
+    and scatter-add the values in one pass (no full re-sort).
+
+    This is the per-layer hot path of the butterfly: after ``all_to_all``
+    each device holds k *already sorted* runs (``idx`` [k, cap] uint32,
+    SENTINEL-padded; ``val`` [k, cap] or [k, cap, W]).  The sort-based
+    path re-sorts all k*cap rows from scratch; here the merge permutation
+    is computed directly instead:
+
+    1. rank of run r's element i in the merge =
+       ``i + sum_s #{j : runs[s][j] (<= if s<r else <) runs[r][i]}``
+       (non-strict against earlier runs keeps the merge stable) — k*(k-1)
+       blocked compare-and-reduce kernels, no data-dependent loop;
+    2. one scatter materializes the merged idx stream; head flags + cumsum
+       give each entry its compacted destination row;
+    3. values go straight from the input layout into the compacted output
+       through a single one-hot MXU matmul: ``final_pos[e] = pos[rank[e]]``.
+
+    Returns ``(chunk, overflow)`` with the same contract as
+    ``sparse_vec.segment_compact`` + ``compact_overflow`` on the sorted
+    concatenation: ``overflow`` counts unique indices beyond
+    ``out_capacity`` (dropped).  Sentinel padding sorts to the tail and is
+    dropped by the compact step automatically.
+    """
+    k, cap = idx.shape
+    total = k * cap
+    ranks = []
+    for r in range(k):
+        rk = jnp.arange(cap, dtype=jnp.int32)
+        for s in range(k):
+            if s == r:
+                continue
+            rk = rk + rank_counts(idx[r], idx[s], strict=(s > r),
+                                  interpret=INTERPRET)
+        ranks.append(rk)
+    rank = jnp.stack(ranks).reshape((total,))        # bijection on [0, total)
+    flat_idx = idx.reshape((total,))
+    merged_idx = jnp.zeros((total,), jnp.uint32).at[rank].set(flat_idx)
+    out, n_unique = _compact_scatter_add(
+        merged_idx, rank, val.reshape((total,) + val.shape[2:]), out_capacity)
+    return out, jnp.maximum(n_unique - out_capacity, 0)
 
 
 def spmv(cols: jax.Array, weights: jax.Array, x: jax.Array) -> jax.Array:

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import CompilerParams
 
 _BIAS = -(2 ** 31)
 
@@ -62,7 +63,7 @@ def rank_counts(a: jax.Array, b: jax.Array, *, strict: bool = True,
                   pl.BlockSpec((bn,), lambda i, j: (j,))],
         out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((cap,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a_p, b_p)
     counts = out[:ca]

@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import CompilerParams
 
 
 def _kernel(cols_ref, w_ref, x_ref, y_ref):
@@ -46,7 +47,7 @@ def spmv_ell(cols: jax.Array, weights: jax.Array, x: jax.Array,
                   pl.BlockSpec(x.shape, lambda i: (0,))],
         out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((rp,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(cols_p, w_p, x.astype(jnp.float32))
     return out[:r]

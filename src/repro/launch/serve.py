@@ -63,8 +63,9 @@ def main(argv=None):
 
     extra = ()
     if cfg.enc_layers:
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
         from repro.models.sharding import full_model_pspec
         ax = mc.axis_ctx(cfg)
         ccfn = shard_map(

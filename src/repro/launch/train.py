@@ -40,6 +40,9 @@ def main(argv=None):
                          "'4,4' (default: single round-robin stage; tune "
                          "with repro.core.tune)")
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--merge", default="sort", choices=["sort", "fused"],
+                    help="per-butterfly-layer merge for sparse sync: full "
+                         "re-sort, or the fused Pallas rank-merge pipeline")
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-parallel size (0 = all devices)")
     ap.add_argument("--model-axis", type=int, default=1)
@@ -72,7 +75,8 @@ def main(argv=None):
                               microbatch=args.microbatch,
                               dp_degrees=dp_degrees,
                               sparse_tokens_hint=max(
-                                  8, args.batch * args.seq // dsize))
+                                  8, args.batch * args.seq // dsize),
+                              sync_merge=args.merge)
     params = T.init_params(cfg, mc.tp, seed=args.seed)
     opt_state = AdamW().init(params)
     batcher = iter(Batcher(vocab=cfg.vocab, batch=args.batch, seq=args.seq,

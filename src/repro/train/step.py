@@ -27,9 +27,10 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.allreduce import (DevicePlan, dense_allreduce_hierarchical,
                                   make_device_plan, sparse_allreduce_union)
 from repro.core.sparse_vec import SENTINEL, HashPerm, SparseChunk
@@ -111,7 +112,8 @@ def _hier_allreduce_leaf(g: jax.Array, plan: DevicePlan) -> jax.Array:
 
 
 def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
-                     dplan: DevicePlan, edges: Sequence[jax.Array]
+                     dplan: DevicePlan, edges: Sequence[jax.Array],
+                     merge: str = "sort"
                      ) -> Tuple[jax.Array, jax.Array]:
     """Sparse Allreduce of a row-sparse gradient table over the data axes.
 
@@ -141,7 +143,7 @@ def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
     safe_rows = jnp.clip(rows, 0, v_l - 1)
     vals = grad[safe_rows].astype(jnp.float32) * okr[:, None]
     chunk, ovf = sparse_allreduce_union(
-        SparseChunk(idx=uniq, val=vals), dplan, edges)
+        SparseChunk(idx=uniq, val=vals), dplan, edges, merge=merge)
     out_rows = (SYNC_PERM.inv(chunk.idx).astype(jnp.int32) - v_start)
     ok = chunk.idx != jnp.uint32(SENTINEL)
     dest = jnp.where(ok, out_rows, v_l)
@@ -153,7 +155,8 @@ def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
 def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
                hier_plan: Optional[DevicePlan],
                sparse_plan: Optional[DevicePlan],
-               sparse_edges, token_ids) -> Tuple[Any, jax.Array]:
+               sparse_edges, token_ids,
+               merge: str = "sort") -> Tuple[Any, jax.Array]:
     """Combine per-device grads into the grad of the global mean loss."""
     spec = full_model_spec_tuples(cfg, mc.tp)
     dp = float(mc.dp)
@@ -165,7 +168,7 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
             return g / dp          # transpose already summed over data
         if mode == "sparse" and path == ("emb",) and not cfg.tie_embeddings:
             synced, ovf = sparse_sync_rows(
-                g, token_ids, mc, sparse_plan, sparse_edges)
+                g, token_ids, mc, sparse_plan, sparse_edges, merge=merge)
             overflow = overflow + ovf
             return synced / dp
         if mode in ("hier", "sparse") and hier_plan is not None and g.size >= mc.dp:
@@ -262,11 +265,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     dp_degrees: Optional[Dict[str, Tuple[int, ...]]] = None,
                     aux_weight: float = 0.01, donate: bool = True,
                     microbatch: int = 1,
-                    sparse_tokens_hint: Optional[int] = None):
+                    sparse_tokens_hint: Optional[int] = None,
+                    sync_merge: str = "sort"):
     """Returns (step_fn, specs) — step_fn is jit-compiled with shardings.
 
     step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
     batch dict: tokens, labels [+ img_embeds / enc_frames].
+
+    ``sync_merge`` ("sort" | "fused") selects the per-butterfly-layer merge
+    of the sparse embedding-grad allreduce (core.allreduce docstring).
 
     microbatch > 1 splits the per-device batch into that many accumulation
     steps (lax.scan) — bounds activation / MoE-dispatch memory; gradients
@@ -339,7 +346,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
             grads = jax.tree.map(lambda g: g / microbatch, grads)
             loss, aux = loss / microbatch, aux / microbatch
         grads, overflow = sync_grads(grads, cfg, mc, sync, hier_plan,
-                                     sparse_plan, edges, tokens)
+                                     sparse_plan, edges, tokens,
+                                     merge=sync_merge)
         gnorm = _sharded_grad_norm(grads, cfg, mc)
         new_params, new_opt, _ = opt.update(grads, opt_state, params,
                                             gnorm=gnorm)

@@ -1,0 +1,78 @@
+"""Deterministic stand-in for the subset of the `hypothesis` API this
+test suite uses (`given`, `settings`, `strategies as st`).
+
+The real hypothesis is the declared test dependency (requirements-dev.txt /
+pyproject `[test]` extra) and is preferred whenever importable;
+tests/conftest.py only puts this package on sys.path when it is missing, so
+hermetic containers can still run the full suite.  Differences from the
+real thing: examples are drawn from a fixed-seed RNG (fully deterministic,
+lightly boundary-biased), there is no shrinking, and the failing example is
+reported in the exception chain instead of being minimised.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+from . import strategies  # noqa: F401  (re-export: `from hypothesis import strategies`)
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0x5EED5
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    """Decorator recording example-count config on the test function."""
+
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples or _DEFAULT_MAX_EXAMPLES}
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    """Run the test once per drawn example (no shrinking)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_shim_settings", None) or \
+                getattr(fn, "_shim_settings", None) or {}
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.RandomState(_SEED)
+            for ex in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **drawn_kw, **kwargs)
+                except _UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{ex}: args={drawn!r} "
+                        f"kwargs={drawn_kw!r}") from e
+
+        # Hide the original signature from pytest so strategy-filled
+        # parameters are not mistaken for fixtures.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+def assume(condition) -> bool:
+    """Degraded `assume`: skip-worthy conditions just pass the example."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+__all__ = ["given", "settings", "strategies", "assume"]

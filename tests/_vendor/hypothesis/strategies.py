@@ -1,0 +1,105 @@
+"""Strategy combinators for the vendored hypothesis shim.
+
+Each strategy wraps a ``draw(rng) -> value`` callable over a shared
+``numpy.random.RandomState``.  Draws are lightly boundary-biased (a few
+percent of examples pin integers/floats to their bounds and lists to their
+min/max sizes) so the usual edge cases still get exercised without real
+hypothesis's adaptive search.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[Any], Any]):
+        self.draw = draw
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self.draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                x = self.draw(rng)
+                if pred(x):
+                    return x
+            raise ValueError("filter predicate rejected 1000 draws")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1) -> SearchStrategy:
+    span = max_value - min_value
+
+    def draw(rng):
+        u = rng.random_sample()
+        if u < 0.04:
+            return min_value
+        if u < 0.08:
+            return max_value
+        # random_sample keeps this exact for spans beyond randint's int range
+        return min(min_value + int(rng.random_sample() * (span + 1)), max_value)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           allow_nan: bool = False, allow_infinity: bool = False
+           ) -> SearchStrategy:
+    def draw(rng):
+        u = rng.random_sample()
+        if u < 0.04:
+            return float(min_value)
+        if u < 0.08:
+            return float(max_value)
+        return float(min_value + rng.random_sample() * (max_value - min_value))
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.random_sample() < 0.5))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 32, unique: bool = False) -> SearchStrategy:
+    def draw(rng):
+        u = rng.random_sample()
+        if u < 0.06:
+            n = min_size
+        elif u < 0.12:
+            n = max_size
+        else:
+            n = int(rng.randint(min_size, max_size + 1))
+        out = []
+        seen = set()
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            x = elements.draw(rng)
+            attempts += 1
+            if unique:
+                if x in seen:
+                    continue
+                seen.add(x)
+            out.append(x)
+        return out
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
+def sampled_from(seq: Sequence) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[int(rng.randint(len(seq)))])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: strats[int(rng.randint(len(strats)))].draw(rng))

@@ -1,0 +1,15 @@
+"""Suite-wide configuration.
+
+The property tests depend on `hypothesis` (declared in requirements-dev.txt
+and the pyproject `[test]` extra).  When the real package is importable it
+is used untouched; in hermetic environments without it, the deterministic
+shim vendored under tests/_vendor is placed on sys.path instead so the
+whole suite still collects and runs.
+"""
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))

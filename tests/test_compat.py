@@ -1,0 +1,145 @@
+"""repro.compat: version-shim resolution (both branches) + layering rule.
+
+The resolvers are pure functions over module objects, so both the
+0.4.x branch and the promoted-API branch are testable on any installed
+JAX by handing them fakes.
+"""
+import pathlib
+import re
+import types
+
+import pytest
+
+from repro import compat
+
+
+# ---------------------------------------------------------------------------
+# shard_map resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_shard_map_new_api():
+    marker = object()
+    fake_jax = types.SimpleNamespace(shard_map=marker)
+    fn, kwarg = compat.resolve_shard_map(fake_jax)
+    assert fn is marker
+    assert kwarg == "check_vma"
+
+
+def test_resolve_shard_map_old_api():
+    marker = object()
+    fake_jax = types.SimpleNamespace()                  # no jax.shard_map
+    fake_exp = types.SimpleNamespace(shard_map=marker)
+    fn, kwarg = compat.resolve_shard_map(fake_jax, fake_exp)
+    assert fn is marker
+    assert kwarg == "check_rep"
+
+
+def test_resolve_shard_map_promoted_name_old_kwarg():
+    """Some releases promoted jax.shard_map before renaming check_rep to
+    check_vma — the kwarg must be detected from the signature, not from
+    where the symbol lives."""
+
+    def promoted(f, *, mesh, in_specs, out_specs, check_rep=True):
+        pass
+
+    fake_jax = types.SimpleNamespace(shard_map=promoted)
+    fn, kwarg = compat.resolve_shard_map(fake_jax)
+    assert fn is promoted
+    assert kwarg == "check_rep"
+
+
+def test_resolve_shard_map_new_signature():
+    def new_style(f, *, mesh, in_specs, out_specs, check_vma=True):
+        pass
+
+    fake_jax = types.SimpleNamespace(shard_map=new_style)
+    assert compat.resolve_shard_map(fake_jax)[1] == "check_vma"
+
+
+def test_resolve_shard_map_on_installed_jax():
+    import jax
+    fn, kwarg = compat.resolve_shard_map(jax)
+    assert callable(fn)
+    assert kwarg in ("check_vma", "check_rep")
+
+
+@pytest.mark.parametrize("kwarg", ["check_vma", "check_rep"])
+def test_make_shard_map_translates_check_kwarg(kwarg):
+    seen = {}
+
+    def raw(f, *, mesh, in_specs, out_specs, **kwargs):
+        seen.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    **kwargs)
+        return "ok"
+
+    wrapped = compat.make_shard_map(raw, kwarg)
+    out = wrapped(lambda: None, mesh="m", in_specs="i", out_specs="o",
+                  check_vma=False)
+    assert out == "ok"
+    assert seen[kwarg] is False                 # renamed (or passed through)
+    other = "check_rep" if kwarg == "check_vma" else "check_vma"
+    assert other not in seen
+
+
+def test_make_shard_map_omits_check_when_unset():
+    seen = {}
+
+    def raw(f, *, mesh, in_specs, out_specs, **kwargs):
+        seen.update(kwargs)
+
+    compat.make_shard_map(raw, "check_rep")(
+        lambda: None, mesh=1, in_specs=2, out_specs=3)
+    assert "check_rep" not in seen and "check_vma" not in seen
+
+
+# ---------------------------------------------------------------------------
+# Pallas compiler params resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_compiler_params_new_name():
+    class NewCP:
+        pass
+    fake = types.SimpleNamespace(CompilerParams=NewCP)
+    assert compat.resolve_compiler_params(fake) is NewCP
+
+
+def test_resolve_compiler_params_old_name():
+    class OldCP:
+        pass
+    fake = types.SimpleNamespace(TPUCompilerParams=OldCP)
+    assert compat.resolve_compiler_params(fake) is OldCP
+
+
+def test_compiler_params_usable_on_installed_jax():
+    cp = compat.CompilerParams(dimension_semantics=("parallel",))
+    assert cp.dimension_semantics == ("parallel",)
+
+
+# ---------------------------------------------------------------------------
+# Layering rule: compat.py is the only module touching the moved symbols
+# ---------------------------------------------------------------------------
+
+_FORBIDDEN = [
+    r"from\s+jax\s+import\s+[^\n]*\bshard_map\b",
+    r"from\s+jax\.experimental\s+import\s+[^\n]*\bshard_map\b",
+    r"from\s+jax\.experimental\.shard_map\s+import",
+    r"import\s+jax\.experimental\.shard_map",
+    r"\bjax\.shard_map\b",
+    r"\bTPUCompilerParams\b",
+    r"pltpu\.CompilerParams\b",
+]
+
+
+def test_no_version_sensitive_imports_outside_compat():
+    pkg_root = pathlib.Path(compat.__file__).resolve().parent   # src/repro
+    offenders = []
+    for path in sorted(pkg_root.rglob("*.py")):
+        if path.name == "compat.py":
+            continue
+        text = path.read_text()
+        for pat in _FORBIDDEN:
+            if re.search(pat, text):
+                offenders.append((str(path.relative_to(pkg_root)), pat))
+    assert not offenders, (
+        "version-sensitive JAX symbols must be imported via repro.compat: "
+        f"{offenders}")

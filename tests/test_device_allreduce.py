@@ -101,7 +101,8 @@ print("PLANNED_OK")
 
 DENSE_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax import shard_map, lax
+from jax import lax
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core.allreduce import (dense_allreduce_binary,
                                   dense_allreduce_hierarchical,
@@ -309,3 +310,50 @@ print("KERNEL_UNION_OK")
 def test_pallas_kernel_inside_union_allreduce():
     """MXU segment-compact kernel composes with the butterfly collectives."""
     assert "KERNEL_UNION_OK" in _run(KERNEL_UNION_CODE)
+
+
+FUSED_UNION_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.api import SparseAllreduce
+from repro.core.sparse_vec import HashPerm
+
+rng = np.random.RandomState(2)
+M, C, R = 8, 48, 2048
+perm = HashPerm.make(9)
+idx = np.full((M, C), 0xFFFFFFFF, np.uint32)
+val = np.zeros((M, C), np.float32)
+acc = {}
+for n in range(M):
+    nn = rng.randint(8, C // 2)
+    oi = rng.choice(R, nn, replace=False).astype(np.uint32)
+    ov = rng.randn(nn).astype(np.float32)
+    h = perm.fwd_np(oi); o = np.argsort(h)
+    idx[n, :nn] = h[o]; val[n, :nn] = ov[o]
+    for j in range(nn):
+        acc[int(h[j])] = acc.get(int(h[j]), 0.0) + float(ov[j])
+want_idx = np.array(sorted(acc), np.uint32)
+want_val = np.array([acc[int(k)] for k in want_idx])
+mesh = jax.make_mesh((8,), ("d",))
+outs = {}
+for merge in ("sort", "fused"):
+    ar = SparseAllreduce(8, (4, 2), backend="device", mesh=mesh, merge=merge)
+    oi, ov, ovf = ar.union_reduce(jnp.asarray(idx), jnp.asarray(val),
+                                  out_capacity=M * C)
+    assert np.asarray(ovf).sum() == 0, merge
+    oi, ov = np.asarray(oi), np.asarray(ov)
+    for n in range(M):
+        m = oi[n] != 0xFFFFFFFF
+        assert np.array_equal(oi[n][m], want_idx), merge
+        np.testing.assert_allclose(ov[n][m], want_val, rtol=1e-5)
+    outs[merge] = (oi, ov)
+np.testing.assert_array_equal(outs["sort"][0], outs["fused"][0])
+np.testing.assert_array_equal(outs["sort"][1], outs["fused"][1])
+print("FUSED_UNION_OK")
+"""
+
+
+@pytest.mark.slow
+def test_fused_merge_union_allreduce_8dev():
+    """merge='fused' (Pallas rank-merge pipeline) == merge='sort' through
+    the full nested butterfly, selected via the SparseAllreduce knob."""
+    assert "FUSED_UNION_OK" in _run(FUSED_UNION_CODE)

@@ -1,0 +1,130 @@
+"""Fused rank-merge pipeline (kernels.ops.merge_sorted_runs) parity.
+
+The fused path must be bit-identical to the sort-based per-layer merge
+(concat + argsort + segment_compact) and to a reference merge assembled
+from the pure-jnp oracles in kernels/ref.py, on power-law (Zipf-drawn,
+hash-permuted) chunks — the paper's workload shape.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse_vec as sv
+from repro.core.sparse_vec import SENTINEL, HashPerm
+from repro.kernels import ops
+from repro.kernels.ref import onehot_scatter_add_ref, rank_counts_ref
+
+
+def _powerlaw_runs(k, cap, width, seed):
+    """k sorted SENTINEL-padded runs of hash-permuted Zipf indices."""
+    rng = np.random.RandomState(seed)
+    perm = HashPerm.make(seed + 1)
+    idx = np.full((k, cap), 0xFFFFFFFF, np.uint32)
+    vshape = (k, cap) if width == 0 else (k, cap, width)
+    val = np.zeros(vshape, np.float32)
+    for r in range(k):
+        raw = (rng.zipf(1.6, cap * 2) % 50_000).astype(np.uint32)
+        h = np.unique(perm.fwd_np(raw))
+        n = min(len(h), rng.randint(1, cap + 1))
+        idx[r, :n] = h[:n]
+        shape = (n,) if width == 0 else (n, width)
+        val[r, :n] = rng.randn(*shape).astype(np.float32)
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
+def _sort_path(idx, val, out_cap):
+    cat = sv.concat_sorted_groups(idx, val)
+    return sv.segment_compact(cat, out_cap), sv.compact_overflow(cat, out_cap)
+
+
+@pytest.mark.parametrize("k,cap,width", [(1, 32, 0), (2, 64, 0), (2, 33, 2),
+                                         (4, 48, 3), (8, 32, 1), (3, 40, 0)])
+def test_fused_bit_identical_to_sort_path(k, cap, width):
+    idx, val = _powerlaw_runs(k, cap, width, seed=k * 100 + cap)
+    out_cap = k * cap
+    want, want_ovf = _sort_path(idx, val, out_cap)
+    got, ovf = ops.merge_sorted_runs(idx, val, out_cap)
+    np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    np.testing.assert_array_equal(np.asarray(got.val), np.asarray(want.val))
+    assert int(ovf) == int(want_ovf) == 0
+
+
+@pytest.mark.parametrize("k,cap", [(2, 64), (4, 32)])
+def test_fused_overflow_matches_sort_path(k, cap):
+    """Undersized output: both paths keep the same prefix and count the
+    same number of dropped unique indices."""
+    idx, val = _powerlaw_runs(k, cap, 0, seed=7)
+    out_cap = max(8, (k * cap) // 4)
+    want, want_ovf = _sort_path(idx, val, out_cap)
+    got, ovf = ops.merge_sorted_runs(idx, val, out_cap)
+    np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    np.testing.assert_array_equal(np.asarray(got.val), np.asarray(want.val))
+    assert int(ovf) == int(want_ovf) > 0
+
+
+def test_fused_all_sentinel_runs():
+    idx = jnp.full((4, 16), SENTINEL, jnp.uint32)
+    val = jnp.zeros((4, 16), jnp.float32)
+    got, ovf = ops.merge_sorted_runs(idx, val, 64)
+    assert int(got.count()) == 0
+    assert int(ovf) == 0
+
+
+def _ref_merge(idx, val, out_cap):
+    """The same pipeline assembled from the kernels/ref.py oracles."""
+    k, cap = idx.shape
+    total = k * cap
+    ranks = []
+    for r in range(k):
+        rk = np.arange(cap, dtype=np.int32)
+        for s in range(k):
+            if s == r:
+                continue
+            side = "left" if s > r else "right"   # strict vs stable non-strict
+            rk = rk + np.asarray(rank_counts_ref(idx[r], idx[s], side))
+        ranks.append(rk)
+    rank = np.stack(ranks).reshape(-1)
+    flat_idx = np.asarray(idx).reshape(-1)
+    merged = np.zeros(total, np.uint32)
+    merged[rank] = flat_idx
+    valid = merged != np.uint32(0xFFFFFFFF)
+    is_head = np.concatenate([[True], merged[1:] != merged[:-1]]) & valid
+    pos = np.cumsum(is_head.astype(np.int32)) - 1
+    pos = np.where(valid & (pos < out_cap), pos, out_cap)
+    out_idx = np.full(out_cap, 0xFFFFFFFF, np.uint32)
+    heads = pos[is_head]
+    out_idx[heads[heads < out_cap]] = merged[is_head][heads < out_cap]
+    final_pos = pos[rank]
+    v = np.asarray(val).reshape(total, -1)
+    out_val = np.asarray(onehot_scatter_add_ref(
+        jnp.asarray(final_pos), jnp.asarray(v), out_cap))
+    if np.asarray(val).ndim == 2:
+        out_val = out_val[:, 0]
+    return out_idx, out_val
+
+
+@pytest.mark.parametrize("k,cap,width", [(2, 48, 0), (4, 32, 2)])
+def test_fused_matches_ref_oracle(k, cap, width):
+    idx, val = _powerlaw_runs(k, cap, width, seed=13)
+    out_cap = k * cap
+    ref_idx, ref_val = _ref_merge(idx, val, out_cap)
+    got, _ = ops.merge_sorted_runs(idx, val, out_cap)
+    np.testing.assert_array_equal(np.asarray(got.idx), ref_idx)
+    np.testing.assert_allclose(np.asarray(got.val), ref_val,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_merge_knob_validation():
+    from repro.core.api import SparseAllreduce
+    with pytest.raises(ValueError):
+        SparseAllreduce(8, (4, 2), merge="bogus")
+    ar = SparseAllreduce(8, (4, 2), merge="fused")
+    assert ar.merge == "fused"
+
+    from repro.core.allreduce import make_device_plan, sparse_allreduce_union
+    from repro.core.sparse_vec import SparseChunk
+    plan = make_device_plan([("d", 8)], {"d": (4, 2)}, 16, 64)
+    chunk = SparseChunk(idx=jnp.full((16,), SENTINEL, jnp.uint32),
+                        val=jnp.zeros((16,), jnp.float32))
+    with pytest.raises(ValueError):
+        sparse_allreduce_union(chunk, plan, [], merge="bogus")

@@ -72,7 +72,7 @@ def test_reduced_prefill_decode(arch, mesh):
     decode, _ = make_decode_step(cfg, mesh)
     extra = ()
     if cfg.enc_layers:
-        from jax import shard_map
+        from repro.compat import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.models.sharding import full_model_pspec
         ax = mc.axis_ctx(cfg)

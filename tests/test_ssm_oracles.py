@@ -56,7 +56,7 @@ def test_mamba_train_vs_stepwise_decode(monkeypatch):
 
     # dummy axis context: run under a 1-device shard_map-free trace by
     # wrapping psum axes with a single-device mesh
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1,), ("model",))
     x = jnp.asarray(rng.randn(B, T, cfg.d_model), jnp.float32)
@@ -93,7 +93,7 @@ def test_mlstm_train_vs_stepwise_decode(monkeypatch):
     rng = np.random.RandomState(2)
     B, T = 2, 48
 
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1,), ("model",))
     x = jnp.asarray(rng.randn(B, T, cfg.d_model) * 0.3, jnp.float32)
