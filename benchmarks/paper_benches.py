@@ -68,9 +68,11 @@ def bench_table1_sparsity() -> List[Row]:
                  f"vertex_frac={np.mean(fracs):.3f} (paper: 0.21)"))
     n2, e2 = 160_000, 600_000        # 1/10000-scale yahoo (sparser)
     edges2 = powerlaw_graph(n2, e2, alpha=2.2, seed=1)
+    t0 = time.perf_counter()
     parts2 = random_edge_partition(edges2, 64, seed=1)
+    dt2 = (time.perf_counter() - t0) * 1e6
     fracs2 = [len(np.unique(p)) / n2 for p in parts2]
-    rows.append(("table1/yahoo_scale_partition64", dt,
+    rows.append(("table1/yahoo_scale_partition64", dt2,
                  f"vertex_frac={np.mean(fracs2):.3f} (paper: 0.03)"))
     return rows
 
@@ -240,17 +242,21 @@ def bench_kernels() -> List[Row]:
 
 
 def bench_merge_modes() -> List[Row]:
-    """Per-layer merge-stage timing, both ``merge`` modes of the union
-    allreduce: ``sort`` (concat + full argsort + segment-compact) vs
-    ``fused`` (Pallas rank-merge + compact + one-hot scatter-add in one
-    pass — kernels.ops.merge_sorted_runs).  Workload: k sorted power-law
-    runs, exactly what arrives at a butterfly layer after all_to_all.
-    On CPU the Pallas path runs in interpret mode (correctness numbers;
-    perf is TPU-only)."""
+    """Per-layer merge-stage timing + instrumented tile work, all three
+    ``merge`` modes of the union allreduce: ``sort`` (concat + full argsort
+    + segment-compact), ``fused`` (Pallas rank-merge + compact + one-hot
+    scatter-add in one pass — kernels.ops.merge_sorted_runs), and
+    ``banded`` (same pipeline band-limited by stream sortedness:
+    frontier-only compare tiles, ceil(k*bm/bk)+1 scatter tiles per output
+    tile).  Workload: k sorted power-law runs, exactly what arrives at a
+    butterfly layer after all_to_all.  The derived column carries the
+    kernels.costmodel tile/FLOP report — the hardware-independent measure
+    of the win; on CPU the Pallas paths run in interpret mode (wall times
+    there are correctness numbers, perf is TPU-only)."""
     import jax
     import jax.numpy as jnp
     from repro.core import sparse_vec as sv
-    from repro.kernels import ops
+    from repro.kernels import costmodel, ops
     rows = []
     rng = np.random.RandomState(0)
     perm = HashPerm.make(3)
@@ -262,7 +268,9 @@ def bench_merge_modes() -> List[Row]:
             h = np.unique(perm.fwd_np(raw))
             n = min(len(h), cap - rng.randint(0, cap // 4))
             idx[r, :n] = h[:n]
-            val[r, :n] = rng.randn(n)
+            # dyadic-lattice values: any summation order gives identical
+            # bits, so the three modes' parity guard can be exact
+            val[r, :n] = rng.randint(-128, 129, n) / 64.0
         j_idx, j_val = jnp.asarray(idx), jnp.asarray(val)
         out_cap = k * cap
 
@@ -270,22 +278,34 @@ def bench_merge_modes() -> List[Row]:
         def chunk_pair(c):
             return c.idx, c.val
 
-        f_sort = jax.jit(lambda i, v: chunk_pair(sv.segment_compact(
-            sv.concat_sorted_groups(i, v), out_cap)))
-        f_fused = jax.jit(lambda i, v: chunk_pair(ops.merge_sorted_runs(
-            i, v, out_cap)[0]))
+        fns = {
+            "sort": jax.jit(lambda i, v: chunk_pair(sv.segment_compact(
+                sv.concat_sorted_groups(i, v), out_cap))),
+            "fused": jax.jit(lambda i, v: chunk_pair(ops.merge_sorted_runs(
+                i, v, out_cap, mode="fused")[0])),
+            "banded": jax.jit(lambda i, v: chunk_pair(ops.merge_sorted_runs(
+                i, v, out_cap, mode="banded")[0])),
+        }
 
         def run(fn):
             oi, ov = fn(j_idx, j_val)
             oi.block_until_ready(), ov.block_until_ready()
 
-        run(f_sort), run(f_fused)                     # compile
-        rows.append((f"merge/sort_k{k}_cap{cap}",
-                     _timeit(lambda: run(f_sort)),
-                     "merge=sort (concat+argsort+compact)"))
-        rows.append((f"merge/fused_k{k}_cap{cap}",
-                     _timeit(lambda: run(f_fused)),
-                     "merge=fused (rank-merge Pallas; interpret off-TPU)"))
+        outs = {}
+        for mode, fn in fns.items():
+            run(fn)                                   # compile
+            outs[mode] = tuple(np.asarray(x) for x in fn(j_idx, j_val))
+            rep = costmodel.merge_tile_report(j_idx, out_cap, mode=mode)
+            derived = (f"merge={mode},flops={rep['flops']},"
+                       f"rank_compare_tiles={rep['rank_compare_tiles']},"
+                       f"rank_cheap_tiles={rep['rank_cheap_tiles']},"
+                       f"scatter_inner_tiles={rep['scatter_inner_tiles_per_out_tile']},"
+                       f"scatter_tiles={rep['scatter_tiles']}")
+            rows.append((f"merge/{mode}_k{k}_cap{cap}",
+                         _timeit(lambda fn=fn: run(fn)), derived))
+        for mode in ("fused", "banded"):              # parity guard
+            for a, b in zip(outs["sort"], outs[mode]):
+                np.testing.assert_array_equal(a, b)
     return rows
 
 

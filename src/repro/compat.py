@@ -96,5 +96,27 @@ from jax.experimental.pallas import tpu as _pltpu  # noqa: E402
 
 CompilerParams = resolve_compiler_params(_pltpu)
 
-__all__ = ["shard_map", "CompilerParams", "resolve_shard_map",
-           "make_shard_map", "resolve_compiler_params"]
+
+# ---------------------------------------------------------------------------
+# Pallas scalar-prefetch grid spec
+# ---------------------------------------------------------------------------
+
+def resolve_prefetch_grid_spec(pltpu_module: Any) -> Any:
+    """``pltpu.PrefetchScalarGridSpec`` under its historical or promoted
+    name.  Scalar prefetch is what lets a kernel's BlockSpec index maps read
+    a host-computed table (the banded kernels' per-tile start blocks and
+    block-edge tables) before the body runs."""
+    for name in ("PrefetchScalarGridSpec", "PrefetchGridSpec"):
+        cls = getattr(pltpu_module, name, None)
+        if cls is not None:
+            return cls
+    raise ImportError(
+        "Pallas TPU module exposes no scalar-prefetch grid spec; banded "
+        "kernels need PrefetchScalarGridSpec (jax >= 0.4.30)")
+
+
+PrefetchScalarGridSpec = resolve_prefetch_grid_spec(_pltpu)
+
+__all__ = ["shard_map", "CompilerParams", "PrefetchScalarGridSpec",
+           "resolve_shard_map", "make_shard_map", "resolve_compiler_params",
+           "resolve_prefetch_grid_spec"]

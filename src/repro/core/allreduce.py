@@ -131,6 +131,12 @@ def _round8(x: int) -> int:
     return max(8, ((x + 7) // 8) * 8)
 
 
+# Per-layer merge strategies for the union allreduce (see
+# sparse_allreduce_union docstring; "fused"/"banded" are the Pallas modes
+# of repro.kernels.ops.merge_sorted_runs).
+MERGE_MODES = ("sort", "fused", "banded")
+
+
 # ---------------------------------------------------------------------------
 # The primitive: fused config-reduce with gather-all (union) semantics.
 # Runs INSIDE shard_map.  (The paper's mini-batch mode: dynamic indices.)
@@ -151,12 +157,15 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
     segment-compacting; ``"fused"`` rank-merges the already-sorted runs,
     compacts duplicates, and scatter-adds in one pass via the Pallas
     pipeline in ``repro.kernels.ops.merge_sorted_runs`` (interpret-mode
-    fallback off-TPU).  Both produce identical results.
+    fallback off-TPU); ``"banded"`` is the same pipeline with both kernels
+    band-limited by the sortedness bound (frontier-only compare tiles,
+    ceil(k*bm/bk)+1 scatter tiles per output tile — see
+    ``kernels.costmodel``).  All three produce identical results.
     Returns (union chunk of capacity ``out_capacity`` per device replica,
     overflow count — entries dropped to capacity anywhere in the network).
     """
-    if merge not in ("sort", "fused"):
-        raise ValueError(f"merge must be 'sort' or 'fused', got {merge!r}")
+    if merge not in MERGE_MODES:
+        raise ValueError(f"merge must be one of {MERGE_MODES}, got {merge!r}")
     overflow = jnp.zeros((), jnp.int32)
 
     # ---- down: scatter-reduce through the layers --------------------------
@@ -171,10 +180,11 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
         r_val = lax.all_to_all(buckets.val, st.axis_name, split_axis=0,
                                concat_axis=0,
                                axis_index_groups=list(map(list, st.axis_index_groups)))
-        if merge == "fused":
+        if merge in ("fused", "banded"):
             from repro.kernels import ops as _kops
             chunk, movf = _kops.merge_sorted_runs(r_idx, r_val,
-                                                  st.merged_capacity)
+                                                  st.merged_capacity,
+                                                  mode=merge)
             overflow = overflow + movf
         else:
             cat = concat_sorted_groups(r_idx, r_val)
@@ -266,7 +276,7 @@ def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
 
     idx: uint32 [M, C] hashed *sorted* indices per node (SENTINEL padded)
     val: [M, C] or [M, C, W]
-    ``merge``: per-layer merge strategy ("sort" | "fused"); see
+    ``merge``: per-layer merge strategy ("sort" | "fused" | "banded"); see
     :func:`sparse_allreduce_union`.
     Returns (idx [M, out_cap], val [M, out_cap(,W)], overflow [M]).
     """

@@ -35,14 +35,18 @@ class SparseAllreduce:
                  value_width: int = 1, mesh=None,
                  expected_nnz: float = 1e5, index_range: float = 1e6,
                  merge: str = "sort"):
-        """``merge`` ("sort" | "fused") picks the per-butterfly-layer merge
-        used by the dynamic-index union path (:meth:`union_reduce`):
-        concatenate-and-resort, or the fused Pallas rank-merge pipeline
-        (``repro.kernels.ops.merge_sorted_runs``).  The planned ``reduce``
+        """``merge`` ("sort" | "fused" | "banded") picks the
+        per-butterfly-layer merge used by the dynamic-index union path
+        (:meth:`union_reduce`): concatenate-and-resort, the fused Pallas
+        rank-merge pipeline (``repro.kernels.ops.merge_sorted_runs``), or
+        its band-limited variant that exploits stream sortedness to cut
+        the per-layer tile work to near-linear.  The planned ``reduce``
         path freezes routing at ``config`` time and has no merge stage, so
         the knob does not affect it."""
-        if merge not in ("sort", "fused"):
-            raise ValueError(f"merge must be 'sort' or 'fused', got {merge!r}")
+        from .allreduce import MERGE_MODES
+        if merge not in MERGE_MODES:
+            raise ValueError(
+                f"merge must be one of {MERGE_MODES}, got {merge!r}")
         self.merge = merge
         self.num_nodes = num_nodes
         if degrees == "auto":
@@ -63,12 +67,15 @@ class SparseAllreduce:
         self._u_cap = None
         self._in_lens = None
         self._union_cache = {}
+        self._staging = None
+        self._stage_rows = self._stage_cols = None
 
     # ------------------------------------------------------------------
     def config(self, out_indices: Sequence[np.ndarray],
                in_indices: Sequence[np.ndarray]) -> ReduceStats:
         self._in_lens = [len(i) for i in in_indices]
         self._out_lens = [len(o) for o in out_indices]
+        self._staging = None                  # re-config invalidates staging
         if self.backend == "sim":
             self._sim = SimSparseAllreduce(
                 self.plan, replication=self.replication, dead=self.dead,
@@ -110,12 +117,30 @@ class SparseAllreduce:
         if self.backend == "sim":
             return self._sim.reduce(out_values)
         import jax.numpy as jnp
-        vshape = (self.num_nodes, self._u_cap) + \
-            ((self.width,) if self.width > 1 else ())
-        vals = np.zeros(vshape, np.float32)
-        for n in range(self.num_nodes):
-            vals[n, : len(out_values[n])] = out_values[n]
-        out = np.asarray(self._reduce_fn(jnp.asarray(vals)))
+        if self._staging is None:
+            # Reusable host staging buffer + flat scatter coordinates
+            # (precomputable: config froze the per-node lengths).  Repeated
+            # same-shape reduces then pay one vectorized scatter instead of
+            # a fresh np.zeros + per-node copy loop per call.
+            vshape = (self.num_nodes, self._u_cap) + \
+                ((self.width,) if self.width > 1 else ())
+            self._staging = np.zeros(vshape, np.float32)
+            lens = np.asarray(self._out_lens)
+            self._stage_rows = np.repeat(np.arange(self.num_nodes), lens)
+            self._stage_cols = np.concatenate(
+                [np.arange(l, dtype=np.int64) for l in self._out_lens])
+        for n, v in enumerate(out_values):
+            if len(v) != self._out_lens[n]:
+                raise ValueError(
+                    f"reduce: node {n} passed {len(v)} values, config "
+                    f"declared {self._out_lens[n]}")
+        flat = np.concatenate([np.asarray(v, np.float32).reshape(
+            (-1,) + ((self.width,) if self.width > 1 else ()))
+            for v in out_values], axis=0)
+        # cells beyond each node's out length stay zero across calls, so no
+        # per-call clearing is needed either.
+        self._staging[self._stage_rows, self._stage_cols] = flat
+        out = np.asarray(self._reduce_fn(jnp.asarray(self._staging)))
         return [out[n, : self._in_lens[n]] for n in range(self.num_nodes)]
 
     # ------------------------------------------------------------------

@@ -1,0 +1,112 @@
+"""Tile-work / FLOP model for the per-layer merge kernels.
+
+Three ways to merge the k sorted runs arriving at a butterfly layer
+(``merge="sort" | "fused" | "banded"``); this module prices each one in
+tiles and FLOPs so benchmarks report *work*, not just interpret-mode wall
+time (which is meaningless off-TPU):
+
+* ``sort``   — concat + full argsort of all C = k*cap rows, then a jnp
+  segment sum.  No Pallas tiles; cost ~ C*log2(C) compare-swaps.
+* ``fused``  — rank-merge (k*(k-1) dense compare planes of cap^2/(bm*bn)
+  tiles each) + one-hot scatter-add whose inner grid dimension scans ALL
+  C/bk input tiles for every output tile: O(cap^2) per layer.
+* ``banded`` — same pipeline, band-limited: compare tiles off the merge
+  frontier are resolved from scalar-prefetched block edges (cheap), and the
+  scatter's inner dimension is the static ``band_inner_tiles(k, bm, bk) =
+  ceil(k*bm/bk)+1`` — near-linear tile work.
+
+``merge_tile_report`` instruments a concrete workload: the rank-merge
+frontier counts come from the very edge tables the banded kernel prefetches
+(``rank_merge.rank_tile_stats``), and the scatter counts are the static
+grid shapes of the kernels in ``onehot_scatter``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from . import onehot_scatter, rank_merge
+from .onehot_scatter import band_inner_tiles
+from .rank_merge import rank_tile_stats
+
+# tile shapes imported from the kernels themselves, so the reports always
+# describe the kernels actually run
+SCATTER_BM, SCATTER_BN, SCATTER_BK = (onehot_scatter.BM, onehot_scatter.BN,
+                                      onehot_scatter.BK)
+RANK_BM, RANK_BN = rank_merge.BM, rank_merge.BN
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def scatter_tile_report(c: int, width: int, out_rows: int, *, mode: str,
+                        band: Optional[int] = None,
+                        bm: int = SCATTER_BM, bn: int = SCATTER_BN,
+                        bk: int = SCATTER_BK) -> dict:
+    """Tile/FLOP count of the one-hot scatter-add for C input rows ->
+    ``out_rows`` destinations of ``width`` columns.
+
+    Each (out-tile, width-tile, in-tile) visit is one [bk,bm]^T @ [bk,bn]
+    MXU contraction = 2*bk*bm*bn FLOPs.  ``fused`` scans all input tiles
+    per output tile; ``banded`` scans the static band bound.
+    """
+    n_out = _cdiv(out_rows, bm)
+    n_w = _cdiv(max(width, 1), bn)
+    if mode == "banded":
+        if band is None:
+            raise ValueError("banded scatter report needs the band bound")
+        inner = band_inner_tiles(band, bm, bk)
+    else:
+        inner = _cdiv(c, bk)
+    tiles = n_out * n_w * inner
+    return {"inner_tiles_per_out_tile": inner, "out_tiles": n_out * n_w,
+            "tiles": tiles, "mxu_flops": tiles * 2 * bk * bm * bn}
+
+
+def merge_tile_report(idx, out_capacity: int, *, mode: str, width: int = 1,
+                      bm: int = SCATTER_BM, bn: int = SCATTER_BN,
+                      bk: int = SCATTER_BK, rank_bm: int = RANK_BM,
+                      rank_bn: int = RANK_BN) -> dict:
+    """Instrumented tile-work count of one butterfly-layer merge on a
+    concrete [k, cap] idx workload (uint32, SENTINEL-padded sorted runs).
+
+    Returns compare-tile counts for the k*(k-1) rank-merge kernels (with
+    the banded frontier classification measured on the actual streams) and
+    the scatter-add tile counts, plus a FLOP-model total.  For ``sort`` the
+    cost is the argsort compare estimate — no Pallas tiles.
+    """
+    k, cap = int(idx.shape[0]), int(idx.shape[1])
+    c = k * cap
+    if mode == "sort":
+        comparisons = int(c * max(1.0, math.log2(max(c, 2))))
+        return {"mode": mode, "k": k, "cap": cap,
+                "rank_compare_tiles": 0, "rank_cheap_tiles": 0,
+                "scatter_inner_tiles_per_out_tile": 0, "scatter_tiles": 0,
+                "flops": comparisons}
+    per_pair_tiles = _cdiv(cap, rank_bm) * _cdiv(cap, rank_bn)
+    pairs = k * (k - 1)
+    if mode == "banded":
+        compare = cheap = 0
+        for r in range(k):
+            for s in range(k):
+                if s == r:
+                    continue
+                st = rank_tile_stats(idx[r], idx[s], strict=(s > r),
+                                     bm=rank_bm, bn=rank_bn)
+                compare += st["frontier_tiles"]
+                cheap += st["full_below_tiles"] + st["skipped_tiles"]
+    elif mode == "fused":
+        compare, cheap = pairs * per_pair_tiles, 0
+    else:
+        raise ValueError(f"unknown merge mode {mode!r}")
+    sc = scatter_tile_report(c, width, out_capacity, mode=mode, band=k,
+                             bm=bm, bn=bn, bk=bk)
+    rank_flops = compare * rank_bm * rank_bn      # one compare+add per cell
+    return {"mode": mode, "k": k, "cap": cap,
+            "rank_compare_tiles": compare, "rank_cheap_tiles": cheap,
+            "rank_total_tiles": pairs * per_pair_tiles,
+            "scatter_inner_tiles_per_out_tile":
+                sc["inner_tiles_per_out_tile"],
+            "scatter_tiles": sc["tiles"],
+            "flops": rank_flops + sc["mxu_flops"]}

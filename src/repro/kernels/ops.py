@@ -4,6 +4,14 @@
 of the pure-jnp ones in ``core.sparse_vec`` (which remain the oracles).
 ``INTERPRET`` switches Pallas to interpret mode off-TPU; on TPU hardware the
 same BlockSpecs compile natively.
+
+Merge modes (``mode="fused" | "banded"``): both run the same rank-merge +
+compact + one-hot scatter-add pipeline; ``banded`` additionally exploits
+the monotonicity of the sorted streams to band-limit both kernels — the
+rank compare planes collapse to frontier tiles and the scatter's inner grid
+dimension to the static ``ceil(band*bm/bk)+1`` bound (see
+``kernels.costmodel`` for the tile/FLOP accounting).  Banded results are
+bit-identical to fused and to the sort-based oracle.
 """
 from __future__ import annotations
 
@@ -13,11 +21,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_vec import SENTINEL, SparseChunk
-from .onehot_scatter import onehot_scatter_add
+from .onehot_scatter import banded_onehot_scatter_add, onehot_scatter_add
 from .rank_merge import rank_counts
 from .spmv_ell import spmv_ell
 
 INTERPRET = jax.default_backend() != "tpu"
+
+MERGE_KERNEL_MODES = ("fused", "banded")
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in MERGE_KERNEL_MODES:
+        raise ValueError(
+            f"mode must be one of {MERGE_KERNEL_MODES}, got {mode!r}")
 
 
 def _compact_positions(idx: jax.Array, out_capacity: int):
@@ -30,7 +46,8 @@ def _compact_positions(idx: jax.Array, out_capacity: int):
 
 
 def _compact_scatter_add(merged_idx: jax.Array, ranks: Optional[jax.Array],
-                         val: jax.Array, out_capacity: int
+                         val: jax.Array, out_capacity: int,
+                         mode: str = "fused", band: Optional[int] = None
                          ) -> Tuple[SparseChunk, jax.Array]:
     """Shared tail of every compact pipeline: scatter the head index of each
     duplicate group, then coalesce values with a single one-hot MXU matmul.
@@ -39,57 +56,88 @@ def _compact_scatter_add(merged_idx: jax.Array, ranks: Optional[jax.Array],
     row e within that stream (None when the rows are already in stream
     order); ``val``: [C] or [C, W].  Rows whose compact position exceeds
     ``out_capacity`` fall off the one-hot tiles (drop semantics).
-    Returns ``(chunk, n_unique)``.
+
+    ``mode="fused"`` feeds the scatter-add straight from the input layout
+    (``final_pos[e] = pos[ranks[e]]`` — arbitrary order, so the kernel
+    scans every input tile per output tile).  ``mode="banded"`` first
+    permutes the values into merge order, making the destination stream
+    ``pos`` non-decreasing with multiplicity <= ``band``, which lets the
+    band-limited kernel visit only ceil(band*bm/bk)+1 input tiles per
+    output tile.  Returns ``(chunk, n_unique)``.
     """
+    _check_mode(mode)
     pos, is_head = _compact_positions(merged_idx, out_capacity)
     out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
     out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
         merged_idx, mode="drop")
-    final_pos = pos if ranks is None else pos[ranks]
     v2 = val if val.ndim == 2 else val[:, None]
-    out_val = onehot_scatter_add(final_pos, v2, out_capacity,
-                                 interpret=INTERPRET).astype(val.dtype)
+    if mode == "banded":
+        if band is None:
+            raise ValueError("banded mode needs a source-multiplicity bound")
+        if ranks is not None:                    # permute into merge order
+            v2 = jnp.zeros_like(v2).at[ranks].set(v2)
+        out_val = banded_onehot_scatter_add(
+            pos, v2, out_capacity, band=band,
+            interpret=INTERPRET).astype(val.dtype)
+    else:
+        final_pos = pos if ranks is None else pos[ranks]
+        out_val = onehot_scatter_add(final_pos, v2, out_capacity,
+                                     interpret=INTERPRET).astype(val.dtype)
     if val.ndim == 1:
         out_val = out_val[:, 0]
     return (SparseChunk(idx=out_idx, val=out_val),
             jnp.sum(is_head.astype(jnp.int32)))
 
 
-def segment_compact(chunk: SparseChunk, out_capacity: Optional[int] = None
-                    ) -> SparseChunk:
-    """Kernel-backed coalesce of a sorted chunk (MXU one-hot scatter-add)."""
+def segment_compact(chunk: SparseChunk, out_capacity: Optional[int] = None,
+                    max_dup: Optional[int] = None) -> SparseChunk:
+    """Kernel-backed coalesce of a sorted chunk (MXU one-hot scatter-add).
+
+    ``max_dup``: optional bound on how many times any index repeats in the
+    chunk; when given, the band-limited kernel is used (a sorted chunk is
+    already in stream order, so no permutation is needed).
+    """
     out_capacity = out_capacity or chunk.capacity
-    out, _ = _compact_scatter_add(chunk.idx, None, chunk.val, out_capacity)
+    mode = "banded" if max_dup is not None else "fused"
+    out, _ = _compact_scatter_add(chunk.idx, None, chunk.val, out_capacity,
+                                  mode=mode, band=max_dup)
     return out
 
 
 def merge_add(a: SparseChunk, b: SparseChunk,
-              out_capacity: Optional[int] = None) -> SparseChunk:
+              out_capacity: Optional[int] = None,
+              mode: str = "fused") -> SparseChunk:
     """Kernel-backed merge of two sorted chunks with collision summation.
 
     1. merge ranks via the blocked compare kernel (no data-dependent loop)
     2. build the merged idx stream with one scatter
     3. coalesce values straight from the *inputs* with a single fused
        one-hot matmul: final_pos[e] = compact_pos[rank[e]].
+
+    ``mode="banded"`` assumes each input chunk has unique valid indices
+    (multiplicity <= 2 in the merge) and band-limits both kernels.
     """
+    _check_mode(mode)
+    banded = mode == "banded"
     ca, cb = a.capacity, b.capacity
     out_capacity = out_capacity or (ca + cb)
     rank_a = jnp.arange(ca, dtype=jnp.int32) + rank_counts(
-        a.idx, b.idx, strict=True, interpret=INTERPRET)
+        a.idx, b.idx, strict=True, interpret=INTERPRET, banded=banded)
     rank_b = jnp.arange(cb, dtype=jnp.int32) + rank_counts(
-        b.idx, a.idx, strict=False, interpret=INTERPRET)
+        b.idx, a.idx, strict=False, interpret=INTERPRET, banded=banded)
     merged_idx = jnp.zeros((ca + cb,), jnp.uint32)
     merged_idx = merged_idx.at[rank_a].set(a.idx)
     merged_idx = merged_idx.at[rank_b].set(b.idx)
     # entry e of (a ++ b) lands at compact position pos[rank_e]
     ranks = jnp.concatenate([rank_a, rank_b])
     cat = jnp.concatenate([a.val, b.val], axis=0)
-    out, _ = _compact_scatter_add(merged_idx, ranks, cat, out_capacity)
+    out, _ = _compact_scatter_add(merged_idx, ranks, cat, out_capacity,
+                                  mode=mode, band=2)
     return out
 
 
-def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int
-                      ) -> Tuple[SparseChunk, jax.Array]:
+def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int,
+                      mode: str = "fused") -> Tuple[SparseChunk, jax.Array]:
     """Fused k-way merge: rank-merge sorted runs, compact duplicate indices,
     and scatter-add the values in one pass (no full re-sort).
 
@@ -108,12 +156,22 @@ def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int
     3. values go straight from the input layout into the compacted output
        through a single one-hot MXU matmul: ``final_pos[e] = pos[rank[e]]``.
 
+    ``mode="banded"`` band-limits both kernel families using the run
+    structure: the rank compare planes resolve non-frontier tiles from
+    scalar-prefetched block edges, and the scatter-add (on values permuted
+    into merge order, where destinations are monotone with multiplicity
+    <= k) visits only ceil(k*bm/bk)+1 input tiles per output tile.  It
+    assumes each run's valid indices are unique — the butterfly invariant
+    (runs are compacted chunks), giving merge multiplicity <= k.
+
     Returns ``(chunk, overflow)`` with the same contract as
     ``sparse_vec.segment_compact`` + ``compact_overflow`` on the sorted
     concatenation: ``overflow`` counts unique indices beyond
     ``out_capacity`` (dropped).  Sentinel padding sorts to the tail and is
     dropped by the compact step automatically.
     """
+    _check_mode(mode)
+    banded = mode == "banded"
     k, cap = idx.shape
     total = k * cap
     ranks = []
@@ -123,13 +181,14 @@ def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int
             if s == r:
                 continue
             rk = rk + rank_counts(idx[r], idx[s], strict=(s > r),
-                                  interpret=INTERPRET)
+                                  interpret=INTERPRET, banded=banded)
         ranks.append(rk)
     rank = jnp.stack(ranks).reshape((total,))        # bijection on [0, total)
     flat_idx = idx.reshape((total,))
     merged_idx = jnp.zeros((total,), jnp.uint32).at[rank].set(flat_idx)
     out, n_unique = _compact_scatter_add(
-        merged_idx, rank, val.reshape((total,) + val.shape[2:]), out_capacity)
+        merged_idx, rank, val.reshape((total,) + val.shape[2:]), out_capacity,
+        mode=mode, band=k)
     return out, jnp.maximum(n_unique - out_capacity, 0)
 
 

@@ -40,9 +40,11 @@ def main(argv=None):
                          "'4,4' (default: single round-robin stage; tune "
                          "with repro.core.tune)")
     ap.add_argument("--microbatch", type=int, default=1)
-    ap.add_argument("--merge", default="sort", choices=["sort", "fused"],
+    ap.add_argument("--merge", default="sort",
+                    choices=["sort", "fused", "banded"],
                     help="per-butterfly-layer merge for sparse sync: full "
-                         "re-sort, or the fused Pallas rank-merge pipeline")
+                         "re-sort, the fused Pallas rank-merge pipeline, or "
+                         "its band-limited (near-linear tile work) variant")
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-parallel size (0 = all devices)")
     ap.add_argument("--model-axis", type=int, default=1)

@@ -272,14 +272,20 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
     batch dict: tokens, labels [+ img_embeds / enc_frames].
 
-    ``sync_merge`` ("sort" | "fused") selects the per-butterfly-layer merge
-    of the sparse embedding-grad allreduce (core.allreduce docstring).
+    ``sync_merge`` ("sort" | "fused" | "banded") selects the
+    per-butterfly-layer merge of the sparse embedding-grad allreduce
+    (core.allreduce docstring; "banded" is the band-limited Pallas
+    pipeline with near-linear per-layer tile work).
 
     microbatch > 1 splits the per-device batch into that many accumulation
     steps (lax.scan) — bounds activation / MoE-dispatch memory; gradients
     are synced once per step, after accumulation (so the paper's allreduce
     sees the full-batch sparsity union, as in its mini-batch use case).
     """
+    from repro.core.allreduce import MERGE_MODES
+    if sync_merge not in MERGE_MODES:
+        raise ValueError(
+            f"sync_merge must be one of {MERGE_MODES}, got {sync_merge!r}")
     mc = mesh_ctx(mesh)
     ax = mc.axis_ctx(cfg)
     opt = opt or AdamW()

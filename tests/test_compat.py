@@ -116,6 +116,27 @@ def test_compiler_params_usable_on_installed_jax():
 
 
 # ---------------------------------------------------------------------------
+# Pallas scalar-prefetch grid spec resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_prefetch_grid_spec_historical_name():
+    class GS:
+        pass
+    fake = types.SimpleNamespace(PrefetchScalarGridSpec=GS)
+    assert compat.resolve_prefetch_grid_spec(fake) is GS
+
+
+def test_resolve_prefetch_grid_spec_missing_raises():
+    with pytest.raises(ImportError):
+        compat.resolve_prefetch_grid_spec(types.SimpleNamespace())
+
+
+def test_prefetch_grid_spec_usable_on_installed_jax():
+    gs = compat.PrefetchScalarGridSpec(num_scalar_prefetch=1, grid=(2,))
+    assert gs.grid == (2,)
+
+
+# ---------------------------------------------------------------------------
 # Layering rule: compat.py is the only module touching the moved symbols
 # ---------------------------------------------------------------------------
 
@@ -127,6 +148,7 @@ _FORBIDDEN = [
     r"\bjax\.shard_map\b",
     r"\bTPUCompilerParams\b",
     r"pltpu\.CompilerParams\b",
+    r"pltpu\.PrefetchScalarGridSpec\b",
 ]
 
 

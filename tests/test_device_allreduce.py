@@ -335,7 +335,7 @@ want_idx = np.array(sorted(acc), np.uint32)
 want_val = np.array([acc[int(k)] for k in want_idx])
 mesh = jax.make_mesh((8,), ("d",))
 outs = {}
-for merge in ("sort", "fused"):
+for merge in ("sort", "fused", "banded"):
     ar = SparseAllreduce(8, (4, 2), backend="device", mesh=mesh, merge=merge)
     oi, ov, ovf = ar.union_reduce(jnp.asarray(idx), jnp.asarray(val),
                                   out_capacity=M * C)
@@ -346,14 +346,16 @@ for merge in ("sort", "fused"):
         assert np.array_equal(oi[n][m], want_idx), merge
         np.testing.assert_allclose(ov[n][m], want_val, rtol=1e-5)
     outs[merge] = (oi, ov)
-np.testing.assert_array_equal(outs["sort"][0], outs["fused"][0])
-np.testing.assert_array_equal(outs["sort"][1], outs["fused"][1])
+for other in ("fused", "banded"):
+    np.testing.assert_array_equal(outs["sort"][0], outs[other][0])
+    np.testing.assert_array_equal(outs["sort"][1], outs[other][1])
 print("FUSED_UNION_OK")
 """
 
 
 @pytest.mark.slow
 def test_fused_merge_union_allreduce_8dev():
-    """merge='fused' (Pallas rank-merge pipeline) == merge='sort' through
-    the full nested butterfly, selected via the SparseAllreduce knob."""
+    """merge='fused' / merge='banded' (Pallas rank-merge pipelines) ==
+    merge='sort' through the full nested butterfly, selected via the
+    SparseAllreduce knob."""
     assert "FUSED_UNION_OK" in _run(FUSED_UNION_CODE)

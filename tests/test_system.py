@@ -72,6 +72,30 @@ def test_api_device_backend_matches_sim():
         np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-6)
 
 
+def test_api_device_reduce_reuses_staging():
+    """Repeated same-config reduces must reuse the host staging buffer
+    (no per-call np.zeros + per-node copy loop) and stay correct when the
+    values change between calls — including with value_width > 1."""
+    rng = np.random.RandomState(1)
+    M, R, W = 1, 400, 3
+    out_idx = [rng.randint(0, R, 50).astype(np.uint32)]
+    in_idx = [rng.choice(R, 25, replace=False).astype(np.uint32)]
+    ar = SparseAllreduce(M, (), backend="device", seed=5, value_width=W)
+    ar.config(out_idx, in_idx)
+    assert ar._staging is None                  # built lazily on first call
+    for it in range(3):
+        out_val = [rng.randn(50, W)]
+        got = ar.reduce(out_val)
+        want = dense_oracle(out_idx, out_val, in_idx, ar.perm, width=W)
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-6)
+        if it == 0:
+            staging = ar._staging
+        else:                                   # same buffer, not re-alloc'd
+            assert ar._staging is staging
+    with pytest.raises(ValueError):             # wrong total length
+        ar.reduce([np.zeros((49, W))])
+
+
 def test_whisper_end_to_end_serve():
     from repro.launch.serve import main as serve_main
     gen = serve_main(["--arch", "whisper-base", "--reduced",
