@@ -1,0 +1,107 @@
+"""Fault tolerance benches (paper §V): completion probability + r× cost.
+
+Promised by ``repro.core.replication``'s docstring, wired into
+``benchmarks/run.py`` (``--only fault``).  Three row families:
+
+* ``fault/completion_*`` — empirical P[protocol completes] under the
+  seeded ``"random"`` failure schedule (``repro.core.faults``), swept over
+  r ∈ {1, 2, 3} × failure counts scaled around the §V-A generalized
+  birthday bound ``expected_tolerated_failures`` (= sqrt(pi*M/2) at r=2,
+  the paper's number), with the Poissonized analytic curve alongside.
+* ``fault/schedule_*`` — the same completion probability under the
+  correlated (rack) and rolling schedules: replicas sit M apart in the
+  physical id space, so contiguous blast radii almost never kill a group
+  — the measured argument for the mixed-radix replica layout.
+* ``fault/overhead_*`` — the r× message-cost overhead of replication on a
+  downscaled Table-II workload: the simulator's byte accounting is the
+  cost model of the device path's redundancy schedule.  Messages are
+  replicated r-fold so bandwidth scales exactly r×; the modeled time
+  multiplier only drops below r on fabrics with per-message floors, and
+  the EC2-2013 calibration is bandwidth-dominated at this packet size
+  (see EXPERIMENTS.md), so the committed baseline reports time_x == r.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.faults import (analytic_completion_probability,
+                               completion_probability)
+from repro.core.replication import expected_tolerated_failures
+from repro.core.simulator import SimSparseAllreduce
+from repro.core.sparse_vec import HashPerm
+from repro.core.topology import ButterflyPlan
+
+Row = Tuple[str, float, str]
+
+M_LOGICAL = 64          # paper-scale cluster (Fig 6 / Table II setting)
+TRIALS = 300
+
+
+def bench_fault_tolerance_completion() -> List[Row]:
+    rows = []
+    for r in (1, 2, 3):
+        bound = expected_tolerated_failures(M_LOGICAL, r)
+        rows.append((f"fault/bound_M{M_LOGICAL}_r{r}", 0.0,
+                     f"expected_tolerated_failures={bound:.2f}"))
+        fs = sorted({1, int(round(bound * 0.5)), int(round(bound)),
+                     min(int(round(bound * 2)), M_LOGICAL * r)} - {0})
+        for f in fs:
+            t0 = time.perf_counter()
+            p = completion_probability(M_LOGICAL, r, f, trials=TRIALS,
+                                       kind="random", seed=0)
+            dt = (time.perf_counter() - t0) * 1e6
+            pa = analytic_completion_probability(M_LOGICAL, r, f)
+            rows.append((f"fault/completion_M{M_LOGICAL}_r{r}_f{f}", dt,
+                         f"p_complete={p:.3f},analytic={pa:.3f}"))
+    return rows
+
+
+def bench_fault_tolerance_schedules() -> List[Row]:
+    rows = []
+    r = 2
+    f = int(round(expected_tolerated_failures(M_LOGICAL, r)))
+    for kind in ("random", "rack", "rolling"):
+        t0 = time.perf_counter()
+        p = completion_probability(M_LOGICAL, r, f, trials=TRIALS,
+                                   kind=kind, seed=0)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fault/schedule_{kind}_M{M_LOGICAL}_r{r}_f{f}", dt,
+                     f"p_complete={p:.3f}"))
+    return rows
+
+
+def bench_fault_tolerance_overhead() -> List[Row]:
+    rows = []
+    rng = np.random.RandomState(0)
+    m, scale = 16, 1500
+    out_i = [(rng.zipf(1.4, scale) % 100_000).astype(np.uint32)
+             for _ in range(m)]
+    out_v = [rng.randn(scale) for _ in range(m)]
+    in_i = [rng.choice(100_000, scale // 2, replace=False).astype(np.uint32)
+            for _ in range(m)]
+    base_bytes = base_time = None
+    for r in (1, 2, 3):
+        sim = SimSparseAllreduce(ButterflyPlan(m, (4, 4)), replication=r,
+                                 perm=HashPerm.make(0))
+        t0 = time.perf_counter()
+        sim.config(out_i, in_i)
+        sim.reduce(out_v)
+        dt = (time.perf_counter() - t0) * 1e6
+        st = sim.reduce_stats
+        if r == 1:
+            base_bytes, base_time = st.total_bytes, st.reduce_time_s
+        rows.append((f"fault/overhead_M{m}_r{r}", dt,
+                     f"reduce_MB={st.total_bytes/1e6:.2f},"
+                     f"bytes_x={st.total_bytes/base_bytes:.2f},"
+                     f"time_x={st.reduce_time_s/base_time:.2f}"))
+    return rows
+
+
+ALL_BENCHES = [
+    bench_fault_tolerance_completion,
+    bench_fault_tolerance_schedules,
+    bench_fault_tolerance_overhead,
+]

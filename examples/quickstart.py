@@ -39,7 +39,9 @@ for n in range(M):
     np.testing.assert_allclose(result[n], oracle[n], rtol=1e-9)
 print("matches dense oracle on every node")
 
-# 4. fault tolerance: r=2 replication, two dead machines (paper SV)
+# 4. fault tolerance: r=2 replication, two dead machines (paper SV).
+# The same knobs work on backend="device" (r*M mesh devices; see the
+# README fault-tolerance section and benchmarks/bench_fault_tolerance.py).
 ar2 = SparseAllreduce(M, plan.degrees, replication=2, dead={3, 9})
 ar2.config(out_idx, in_idx)
 result2 = ar2.reduce(out_val)

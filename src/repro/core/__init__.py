@@ -4,11 +4,14 @@ from .allreduce import (DevicePlan, Stage, dense_allreduce_binary,
                         dense_allreduce_hierarchical, dense_allreduce_ring,
                         make_device_plan, run_union_allreduce,
                         sparse_allreduce_union)
+from .faults import (SCHEDULE_KINDS, FailureSchedule, completion_probability,
+                     make_schedule)
 from .netmodel import EC2_2013, TPU_DCN, TPU_ICI, Fabric
 from .planned import PlannedSparseAllreduce, plan_sparse_allreduce
-from .replication import (contribution_weights, expected_tolerated_failures,
+from .replication import (DeadLogicalNode, contribution_weights,
+                          expected_tolerated_failures, first_alive_replicas,
                           replica_groups, simulate_random_failures)
-from .simulator import DeadLogicalNode, ReduceStats, SimSparseAllreduce, dense_oracle
+from .simulator import ReduceStats, SimSparseAllreduce, dense_oracle
 from .sparse_vec import (SENTINEL, HashPerm, SparseChunk, bucket_partition,
                          merge_add, merge_add_np, segment_compact, sort_chunk,
                          sort_coalesce_np, tree_sum, tree_sum_np)

@@ -59,6 +59,14 @@ class DevicePlan:
     axis; the concatenated degree sequence is the logical ButterflyPlan over
     prod(sizes) nodes.  Edges arrays are host-precomputed per logical node
     and passed into shard_map sharded over the same axes.
+
+    ``replication`` > 1 marks the plan as r-way replicated (paper §V):
+    the ``num_nodes`` physical devices host ``num_nodes / r`` logical
+    shards, replica j of shard i at physical id ``i + j * num_logical``
+    (``repro.core.replication.replica_groups``), and stage 0 is the
+    replica-merge layer — node ids are mixed-radix with digit 0 most
+    significant, so prepending degree r makes the stage-0 groups exactly
+    the replica groups.
     """
 
     axes: Tuple[Tuple[str, int], ...]
@@ -66,10 +74,21 @@ class DevicePlan:
     logical: ButterflyPlan
     in_capacity: int
     out_capacity: int
+    replication: int = 1
 
     @property
     def num_nodes(self) -> int:
         return self.logical.num_nodes
+
+    @property
+    def num_logical(self) -> int:
+        """Logical shard count (== num_nodes unless replicated)."""
+        return self.logical.num_nodes // self.replication
+
+    def replica_groups(self):
+        """[[physical ids] per logical shard] (see core.replication)."""
+        from .replication import replica_groups
+        return replica_groups(self.num_nodes, self.replication)
 
     def edges_arrays(self) -> List[np.ndarray]:
         """Per-stage [*axis_sizes, k_l + 1] uint32 range-edge tensors."""
@@ -86,14 +105,35 @@ def make_device_plan(axes: Sequence[Tuple[str, int]],
                      degrees_per_axis: dict,
                      in_capacity: int,
                      out_capacity: int,
-                     slack: float = 2.0) -> DevicePlan:
+                     slack: float = 2.0,
+                     replication: int = 1) -> DevicePlan:
     """Bind a heterogeneous butterfly to mesh axes with static capacities.
 
     Capacity schedule: stage l buckets hold ``ceil(m_{l-1}/k * slack)``
     entries; merged chunks hold ``min(k*c_l, ceil(out_capacity * slack /
     prod(k_1..k_l)))`` — lossless when the hash permutation balances ranges
     (paper §III-A) and ``out_capacity`` covers the global union.
+
+    ``replication=r`` builds the r-way replicated layout (paper §V):
+    ``degrees_per_axis`` then gives the *logical* degree sequence (over
+    ``size / r`` shards for the first axis) and the physical plan prepends
+    a degree-r replica-merge stage to the first (most significant) axis,
+    whose groups are ``replication.replica_groups(prod(sizes), r)``.
+    Apply ``contribution_weights`` to the values fed in (``dead=`` on
+    :func:`run_union_allreduce`) so each shard is counted exactly once.
     """
+    if replication < 1:
+        raise ValueError(f"replication must be >= 1, got {replication}")
+    if replication > 1:
+        name0, size0 = axes[0]
+        if size0 % replication:
+            raise ValueError(
+                f"first axis {name0}={size0} not divisible by "
+                f"r={replication}")
+        base = tuple(degrees_per_axis.get(
+            name0, (size0 // replication,) if size0 > replication else ()))
+        degrees_per_axis = dict(degrees_per_axis)
+        degrees_per_axis[name0] = (replication,) + base
     degrees: List[int] = []
     for name, size in axes:
         d = tuple(degrees_per_axis.get(name, (size,)))
@@ -124,7 +164,8 @@ def make_device_plan(axes: Sequence[Tuple[str, int]],
             m_prev = merged
             li += 1
     return DevicePlan(axes=tuple(axes), stages=tuple(stages), logical=logical,
-                      in_capacity=in_capacity, out_capacity=out_capacity)
+                      in_capacity=in_capacity, out_capacity=out_capacity,
+                      replication=replication)
 
 
 def _round8(x: int) -> int:
@@ -145,7 +186,8 @@ MERGE_MODES = ("sort", "fused", "banded")
 def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
                            edges: Sequence[jax.Array],
                            use_kernel: bool = False,
-                           merge: str = "sort"
+                           merge: str = "sort",
+                           weight: Optional[jax.Array] = None
                            ) -> Tuple[SparseChunk, jax.Array]:
     """Nested butterfly sparse allreduce; every node gets the full union sum.
 
@@ -161,11 +203,20 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
     band-limited by the sortedness bound (frontier-only compare tiles,
     ceil(k*bm/bk)+1 scatter tiles per output tile — see
     ``kernels.costmodel``).  All three produce identical results.
+    ``weight`` (r-way replicated plans, paper §V): this device's scalar
+    ``contribution_weights`` entry — 1.0 on the first alive replica of each
+    logical shard, 0.0 elsewhere — multiplied into the values before the
+    first layer so every shard's sum is taken from exactly one replica.
+    Indices still flow from every replica (zeros merge away bit-exactly),
+    so the union is identical to the fault-free non-replicated result.
     Returns (union chunk of capacity ``out_capacity`` per device replica,
     overflow count — entries dropped to capacity anywhere in the network).
     """
     if merge not in MERGE_MODES:
         raise ValueError(f"merge must be one of {MERGE_MODES}, got {merge!r}")
+    if weight is not None:
+        w = weight.reshape(()).astype(chunk.val.dtype)
+        chunk = SparseChunk(idx=chunk.idx, val=chunk.val * w)
     overflow = jnp.zeros((), jnp.int32)
 
     # ---- down: scatter-reduce through the layers --------------------------
@@ -271,13 +322,21 @@ def dense_allreduce_binary(x: jax.Array, axis_name: str, axis_size: int) -> jax.
 
 def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
                         idx: jax.Array, val: jax.Array,
-                        use_kernel: bool = False, merge: str = "sort"):
+                        use_kernel: bool = False, merge: str = "sort",
+                        dead=None):
     """Convenience wrapper: shard (idx, val) over the plan's axes and run.
 
     idx: uint32 [M, C] hashed *sorted* indices per node (SENTINEL padded)
     val: [M, C] or [M, C, W]
     ``merge``: per-layer merge strategy ("sort" | "fused" | "banded"); see
     :func:`sparse_allreduce_union`.
+    ``dead``: set of dead *physical* node ids for r-way replicated plans
+    (``make_device_plan(replication=r)``); the corresponding
+    ``contribution_weights`` are applied inside shard_map so each logical
+    shard is summed from its first alive replica.  Raises
+    ``DeadLogicalNode`` if a whole replica group is dead — with
+    ``replication=1`` any non-empty ``dead`` raises (no redundancy).
+    Completion probability and overhead: benchmarks/bench_fault_tolerance.py.
     Returns (idx [M, out_cap], val [M, out_cap(,W)], overflow [M]).
     """
     from jax.sharding import PartitionSpec as P
@@ -290,25 +349,37 @@ def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
     idx_r = idx.reshape(shape + idx.shape[1:])
     val_r = val.reshape(shape + val.shape[1:])
 
+    weights = None
+    if plan.replication > 1 or dead:
+        from .replication import contribution_weights
+        weights = jnp.asarray(contribution_weights(
+            plan.num_nodes, plan.replication, dead)).reshape(shape)
+
     data_specs = P(*axis_names)
     edge_specs = tuple(P(*axis_names, *([None])) for _ in edges)
+    w_specs = (data_specs,) if weights is not None else ()
+    w_args = (weights,) if weights is not None else ()
 
-    def body(i, v, *e):
+    def body(i, v, *rest):
+        if weights is not None:
+            w, e = rest[0], rest[1:]
+        else:
+            w, e = None, rest
         i = i.reshape(i.shape[len(shape):])
         v = v.reshape(v.shape[len(shape):])
         chunk, ovf = sparse_allreduce_union(SparseChunk(idx=i, val=v), plan,
                                             e, use_kernel=use_kernel,
-                                            merge=merge)
+                                            merge=merge, weight=w)
         pad = (1,) * len(shape)
         return (chunk.idx.reshape(pad + chunk.idx.shape),
                 chunk.val.reshape(pad + chunk.val.shape),
                 ovf.reshape(pad))
 
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(data_specs, data_specs) + edge_specs,
+                   in_specs=(data_specs, data_specs) + w_specs + edge_specs,
                    out_specs=(data_specs, data_specs, data_specs),
                    check_vma=False)
-    oi, ov, ovf = fn(idx_r, val_r, *edges)
+    oi, ov, ovf = fn(idx_r, val_r, *w_args, *edges)
     m = math.prod(shape)
     return (oi.reshape((m,) + oi.shape[len(shape):]),
             ov.reshape((m,) + ov.shape[len(shape):]),

@@ -11,6 +11,15 @@ Backends:
     mesh (the production TPU path; works on any device count incl. forced
     host devices).
 
+Both backends take ``replication=r`` + ``dead`` (paper §V): ``num_nodes``
+logical shards are hosted r-way redundantly — on the device backend over
+``r * num_nodes`` physical mesh devices laid out per
+``repro.core.replication.replica_groups`` — and the reduce completes with
+unchanged results for any failure set that leaves each replica group at
+least one alive member, raising ``DeadLogicalNode`` otherwise.  Failure
+schedules for tests/benches live in ``repro.core.faults``; cost and
+completion-probability curves in ``benchmarks/bench_fault_tolerance.py``.
+
 The gather-all (union) device primitive used by the training framework is
 exposed separately in :mod:`repro.core.allreduce`.
 """
@@ -69,6 +78,12 @@ class SparseAllreduce:
         self._union_cache = {}
         self._staging = None
         self._stage_rows = self._stage_cols = None
+        self._first_alive = None
+
+    @property
+    def num_physical(self) -> int:
+        """Physical device count: ``num_nodes`` logical shards × r."""
+        return self.num_nodes * self.replication
 
     # ------------------------------------------------------------------
     def config(self, out_indices: Sequence[np.ndarray],
@@ -82,31 +97,37 @@ class SparseAllreduce:
                 perm=self.perm, fabric=self.fabric, value_width=self.width)
             return self._sim.config(out_indices, in_indices)
         elif self.backend == "device":
+            from .replication import first_alive_replicas
+            r, m_phys = self.replication, self.num_physical
+            # Validates the failure set before touching the mesh: raises
+            # DeadLogicalNode when a whole replica group is dead, exactly
+            # like SimSparseAllreduce (and with r=1, on any failure).
+            self._first_alive = first_alive_replicas(m_phys, r, self.dead)
             import jax
             from .allreduce import make_device_plan
             from .planned import plan_sparse_allreduce
-            if self.replication != 1:
-                raise NotImplementedError(
-                    "device backend: replication via contribution_weights in "
-                    "repro.core.replication; see bench_fault_tolerance")
             mesh = self.mesh
             if mesh is None:
                 n = len(jax.devices())
-                if n % self.num_nodes:
-                    raise ValueError(f"{n} devices for {self.num_nodes} nodes")
-                mesh = jax.make_mesh((self.num_nodes,), ("nodes",))
+                if n % m_phys:
+                    raise ValueError(
+                        f"{n} devices for {m_phys} physical nodes "
+                        f"({self.num_nodes} logical x r={r})")
+                mesh = jax.make_mesh((m_phys,), ("nodes",))
             axis = mesh.axis_names[0]
             dplan = make_device_plan(
-                [(axis, self.num_nodes)], {axis: self.plan.degrees},
+                [(axis, m_phys)], {axis: self.plan.degrees},
                 in_capacity=max(self._out_lens),
-                out_capacity=sum(self._out_lens))
+                out_capacity=sum(self._out_lens), replication=r)
             self._planned = plan_sparse_allreduce(
                 dplan, out_indices, in_indices, perm=self.perm,
-                width=self.width)
+                width=self.width, dead=self.dead)
             self._reduce_fn = self._planned.make_reduce_fn(mesh)
             self._u_cap = self._planned.user_scatter.shape[1]
-            # stats come from a simulator shadow-config (same routing)
-            shadow = SimSparseAllreduce(self.plan, perm=self.perm,
+            # stats come from a simulator shadow-config (same routing,
+            # r-fold message accounting when replicated)
+            shadow = SimSparseAllreduce(self.plan, replication=r,
+                                        dead=self.dead, perm=self.perm,
                                         fabric=self.fabric,
                                         value_width=self.width)
             return shadow.config(out_indices, in_indices)
@@ -114,21 +135,27 @@ class SparseAllreduce:
 
     # ------------------------------------------------------------------
     def reduce(self, out_values: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """``out_values``: one array per *logical* node; with replication
+        the values are staged onto every replica (dead / non-first replicas
+        are zero-weighted on device) and each logical result is read back
+        from its first alive replica."""
         if self.backend == "sim":
             return self._sim.reduce(out_values)
         import jax.numpy as jnp
+        r, m_phys = self.replication, self.num_physical
         if self._staging is None:
             # Reusable host staging buffer + flat scatter coordinates
             # (precomputable: config froze the per-node lengths).  Repeated
             # same-shape reduces then pay one vectorized scatter instead of
             # a fresh np.zeros + per-node copy loop per call.
-            vshape = (self.num_nodes, self._u_cap) + \
+            vshape = (m_phys, self._u_cap) + \
                 ((self.width,) if self.width > 1 else ())
             self._staging = np.zeros(vshape, np.float32)
-            lens = np.asarray(self._out_lens)
-            self._stage_rows = np.repeat(np.arange(self.num_nodes), lens)
+            phys_lens = list(self._out_lens) * r
+            self._stage_rows = np.repeat(np.arange(m_phys),
+                                         np.asarray(phys_lens))
             self._stage_cols = np.concatenate(
-                [np.arange(l, dtype=np.int64) for l in self._out_lens])
+                [np.arange(l, dtype=np.int64) for l in phys_lens])
         for n, v in enumerate(out_values):
             if len(v) != self._out_lens[n]:
                 raise ValueError(
@@ -137,11 +164,14 @@ class SparseAllreduce:
         flat = np.concatenate([np.asarray(v, np.float32).reshape(
             (-1,) + ((self.width,) if self.width > 1 else ()))
             for v in out_values], axis=0)
+        if r > 1:
+            flat = np.concatenate([flat] * r, axis=0)
         # cells beyond each node's out length stay zero across calls, so no
         # per-call clearing is needed either.
         self._staging[self._stage_rows, self._stage_cols] = flat
         out = np.asarray(self._reduce_fn(jnp.asarray(self._staging)))
-        return [out[n, : self._in_lens[n]] for n in range(self.num_nodes)]
+        return [out[self._first_alive[n], : self._in_lens[n]]
+                for n in range(self.num_nodes)]
 
     # ------------------------------------------------------------------
     def union_reduce(self, idx, val, out_capacity: int,
@@ -150,32 +180,56 @@ class SparseAllreduce:
         mode) on a device mesh, honouring the ``merge`` knob.
 
         idx: uint32 [num_nodes, C] *hashed, sorted*, SENTINEL-padded per-node
-        indices; val: [num_nodes, C] or [num_nodes, C, W].
-        Returns (idx [M, out_capacity], val, overflow [M]) — every node gets
-        the full union sum.  Requires a mesh of ``num_nodes`` devices.
-        The plan and compiled pipeline are cached per (shape, out_capacity,
-        use_kernel), so repeated same-shape calls pay tracing once.
+        indices; val: [num_nodes, C] or [num_nodes, C, W] — one chunk per
+        *logical* node.  With ``replication=r`` the chunks are mirrored onto
+        ``r * num_nodes`` physical mesh devices, ``contribution_weights``
+        (for this instance's ``dead`` set) are applied inside shard_map, and
+        the per-logical-node results are read back from each shard's first
+        alive replica; raises ``DeadLogicalNode`` when a replica group is
+        lost.  Returns (idx [num_nodes, out_capacity], val,
+        overflow [num_nodes]) — every node gets the full union sum.
+        Requires a mesh of ``num_nodes * replication`` devices.  The plan
+        and compiled pipeline are cached per (shape, out_capacity,
+        use_kernel, dead), so repeated same-shape calls pay tracing once.
         """
         import jax
         import jax.numpy as jnp
 
         from .allreduce import make_device_plan, run_union_allreduce
+        from .replication import contribution_weights, first_alive_replicas
+        r, m_phys = self.replication, self.num_physical
+        if r != 1 or self.dead:
+            contribution_weights(m_phys, r, self.dead)  # DeadLogicalNode
         idx = jnp.asarray(idx)
         val = jnp.asarray(val)
-        key = (idx.shape, val.shape, val.dtype, out_capacity, use_kernel)
+        if idx.shape[0] != self.num_nodes:
+            raise ValueError(
+                f"union_reduce: expected {self.num_nodes} logical chunks, "
+                f"got {idx.shape[0]}")
+        if r > 1:
+            idx = jnp.tile(idx, (r,) + (1,) * (idx.ndim - 1))
+            val = jnp.tile(val, (r,) + (1,) * (val.ndim - 1))
+        key = (idx.shape, val.shape, val.dtype, out_capacity, use_kernel,
+               frozenset(self.dead or ()))
         fn = self._union_cache.get(key)
         if fn is None:
             mesh = self.mesh
             if mesh is None:
-                mesh = jax.make_mesh((self.num_nodes,), ("nodes",))
+                mesh = jax.make_mesh((m_phys,), ("nodes",))
             axis = mesh.axis_names[0]
             dplan = make_device_plan(
-                [(axis, self.num_nodes)], {axis: self.plan.degrees},
-                in_capacity=idx.shape[1], out_capacity=out_capacity)
+                [(axis, m_phys)], {axis: self.plan.degrees},
+                in_capacity=idx.shape[1], out_capacity=out_capacity,
+                replication=r)
             fn = jax.jit(lambda i, v: run_union_allreduce(
-                mesh, dplan, i, v, use_kernel=use_kernel, merge=self.merge))
+                mesh, dplan, i, v, use_kernel=use_kernel, merge=self.merge,
+                dead=self.dead))
             self._union_cache[key] = fn
-        return fn(idx, val)
+        oi, ov, ovf = fn(idx, val)
+        if r > 1:
+            fa = first_alive_replicas(m_phys, r, self.dead)
+            oi, ov, ovf = oi[fa], ov[fa], ovf[fa]
+        return oi, ov, ovf
 
     # ------------------------------------------------------------------
     @property

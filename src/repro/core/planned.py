@@ -67,11 +67,17 @@ class PlannedSparseAllreduce:
     bottom_hit: np.ndarray          # [M, q_cap] bool
     user_gather: np.ndarray         # [M, uin_cap] sorted-in slot per user slot
     in_user_len: int
+    # r-way replication (paper §V): per-physical-node contribution weight
+    # (1.0 on each logical shard's first alive replica, 0.0 elsewhere),
+    # applied to the values inside shard_map.  None when not replicated.
+    weights: Optional[np.ndarray] = None
 
     # ---------------------------------------------------------------------
     def device_args(self):
         """Routing tensors as jnp arrays, ordered for reduce_on_device."""
         args = [jnp.asarray(self.user_scatter)]
+        if self.weights is not None:
+            args.insert(0, jnp.asarray(self.weights))
         for L in self.layers:
             args += [jnp.asarray(L.send_gather), jnp.asarray(L.merge_scatter),
                      jnp.asarray(L.up_send_gather), jnp.asarray(L.up_recv_scatter)]
@@ -98,6 +104,9 @@ class PlannedSparseAllreduce:
             return a.reshape(a.shape[nax:])
 
         it = iter(routing)
+        if self.weights is not None:
+            # replica contribution weight (scalar per device, paper §V)
+            values = values * sq(next(it)).astype(values.dtype)
         user_scatter = sq(next(it))
         W = values.shape[-1] if values.ndim > 1 else None
 
@@ -190,9 +199,30 @@ def plan_sparse_allreduce(dplan: DevicePlan,
                           out_indices: Sequence[np.ndarray],
                           in_indices: Sequence[np.ndarray],
                           perm: Optional[HashPerm] = None,
-                          width: int = 1) -> PlannedSparseAllreduce:
-    """The paper's ``config`` call: indices in, frozen routing out."""
+                          width: int = 1,
+                          dead=None) -> PlannedSparseAllreduce:
+    """The paper's ``config`` call: indices in, frozen routing out.
+
+    For r-way replicated plans (``make_device_plan(replication=r)``,
+    paper §V) ``out_indices`` / ``in_indices`` are the *logical* per-shard
+    index lists (``dplan.num_logical`` of them); routing is frozen for all
+    ``r * num_logical`` physical replicas and ``dead`` physical node ids
+    are masked via ``contribution_weights`` applied to the values inside
+    shard_map.  Raises ``DeadLogicalNode`` when a whole replica group is
+    dead.  Cost curves: benchmarks/bench_fault_tolerance.py.
+    """
     perm = perm if perm is not None else HashPerm.make(0)
+    weights = None
+    if dplan.replication > 1 or dead:
+        from .replication import contribution_weights
+        weights = contribution_weights(dplan.logical.num_nodes,
+                                       dplan.replication, dead)
+        if len(out_indices) != dplan.num_logical:
+            raise ValueError(
+                f"replicated plan expects {dplan.num_logical} logical index "
+                f"lists, got {len(out_indices)}")
+        out_indices = list(out_indices) * dplan.replication
+        in_indices = list(in_indices) * dplan.replication
     sim = SimSparseAllreduce(dplan.logical, perm=perm, value_width=width)
     sim.config(out_indices, in_indices)
     plan, m = dplan.logical, dplan.logical.num_nodes
@@ -285,4 +315,4 @@ def plan_sparse_allreduce(dplan: DevicePlan,
         dplan=dplan, perm=perm, width=width,
         user_scatter=user_scatter, sorted_size=sorted_size, layers=layers,
         bottom_gather=bottom_gather, bottom_hit=bottom_hit,
-        user_gather=user_gather, in_user_len=uin_cap)
+        user_gather=user_gather, in_user_len=uin_cap, weights=weights)

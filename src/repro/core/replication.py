@@ -1,8 +1,8 @@
 """r-way replication for fault tolerance (paper §V).
 
 Simulator path: fully faithful — replicated messages, first-alive-replica
-selection, DeadLogicalNode when a whole replica group is lost (birthday
-bound ~sqrt(M) random failures for r=2).
+selection, :class:`DeadLogicalNode` when a whole replica group is lost
+(birthday bound ~sqrt(M) random failures for r=2).
 
 Device path: SPMD collectives are deterministic, so *packet racing* (§V-B)
 has no TPU analogue (documented in DESIGN.md §8).  What transfers is the
@@ -11,20 +11,34 @@ M_phys / r logical shards, each replicated r times; exactly one alive
 replica per logical shard contributes its chunk (weight 1), the rest
 contribute zeros.  Every device still receives the full union, so any
 replica can stand in for a dead one — same completion guarantee as the
-paper, costed in benchmarks/bench_fault_tolerance.py.
+paper.  The device layout is a plain butterfly: physical degrees are
+``(r,) + logical_degrees`` so stage 0's mixed-radix groups are exactly
+:func:`replica_groups` and the replica merge is an ordinary layer
+(``core.allreduce.make_device_plan(replication=r)``).  Cost and
+completion-probability curves: ``benchmarks/bench_fault_tolerance.py``.
+
+Failure-injection schedules (random / rack / rolling) shared by the tests,
+the simulator, and the bench live in :mod:`repro.core.faults`.
 """
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Set
+from typing import List, Optional, Set
 
 import numpy as np
 
-from .topology import ButterflyPlan
+
+class DeadLogicalNode(RuntimeError):
+    """All replicas of a logical node are dead — protocol cannot complete
+    (paper §V-A).  Raised identically by the simulator
+    (``SimSparseAllreduce``) and the device backend
+    (``contribution_weights`` at ``config``/``union_reduce`` time)."""
 
 
-def replica_groups(m_physical: int, replication: int):
+def replica_groups(m_physical: int, replication: int) -> List[List[int]]:
     """Logical shard i lives on physical nodes i, i+M, ..., i+(r-1)M."""
+    if replication < 1:
+        raise ValueError(f"replication must be >= 1, got {replication}")
     if m_physical % replication:
         raise ValueError(f"{m_physical} devices not divisible by r={replication}")
     m_logical = m_physical // replication
@@ -36,40 +50,70 @@ def contribution_weights(m_physical: int, replication: int,
                          dead: Optional[Set[int]] = None) -> np.ndarray:
     """weight[d] = 1.0 iff d is the first alive replica of its logical shard.
 
-    Raises if a whole replica group is dead (protocol cannot complete —
-    paper §V-A).
+    Raises :class:`DeadLogicalNode` if a whole replica group is dead (the
+    protocol cannot complete — paper §V-A).  With ``replication=1`` every
+    group is a single node, so any non-empty ``dead`` raises: no redundancy
+    means no tolerated failures, matching the simulator.
     """
     dead = set(dead or ())
+    bad = dead - set(range(m_physical))
+    if bad:
+        raise ValueError(
+            f"dead ids {sorted(bad)} outside [0, {m_physical}) — failure "
+            f"injection would silently be a no-op")
     w = np.zeros(m_physical, np.float32)
     for group in replica_groups(m_physical, replication):
         alive = [d for d in group if d not in dead]
         if not alive:
-            raise RuntimeError(f"replica group {group} entirely dead")
+            raise DeadLogicalNode(
+                f"replica group {group} entirely dead (r={replication})")
         w[alive[0]] = 1.0
     return w
 
 
+def first_alive_replicas(m_physical: int, replication: int,
+                         dead: Optional[Set[int]] = None) -> np.ndarray:
+    """[m_logical] physical id of each logical shard's first alive replica
+    (the replica whose :func:`contribution_weights` entry is 1)."""
+    w = contribution_weights(m_physical, replication, dead)
+    m_logical = m_physical // replication
+    out = np.empty(m_logical, np.int64)
+    for p in np.nonzero(w)[0]:
+        out[p % m_logical] = p
+    return out
+
+
 def expected_tolerated_failures(m_logical: int, replication: int = 2) -> float:
-    """Birthday-paradox estimate: ~sqrt(M) random failures before some
-    replica pair collides (paper §V-A, r=2)."""
-    if replication != 2:
-        raise NotImplementedError("paper analyses r=2")
-    return math.sqrt(math.pi * m_logical / 2)
+    """Generalized birthday estimate of the expected number of random
+    physical failures before some replica group is fully dead.
+
+    Failures land in the M logical groups like balls in urns; a group dies
+    at its r-th hit (sampling without replacement, r hits == all r replicas
+    dead).  The Klamkin–Newman first-r-fold-collision asymptotic gives
+
+        E[failures] ~ Gamma(1 + 1/r) * (r!)^(1/r) * M^(1 - 1/r)
+
+    which at r=2 is exactly the paper's §V-A bound sqrt(pi*M/2), and at
+    r=1 is 1 (the first failure is fatal without redundancy).
+    """
+    r = replication
+    if r < 1:
+        raise ValueError(f"replication must be >= 1, got {r}")
+    return (math.gamma(1.0 + 1.0 / r) * math.factorial(r) ** (1.0 / r)
+            * m_logical ** (1.0 - 1.0 / r))
 
 
 def simulate_random_failures(m_logical: int, replication: int,
                              num_failures: int, trials: int = 1000,
                              seed: int = 0) -> float:
     """Empirical P[protocol completes] under ``num_failures`` random dead
-    physical nodes (validates the sqrt(M) claim; see tests)."""
-    rng = np.random.RandomState(seed)
-    m_phys = m_logical * replication
-    ok = 0
-    for _ in range(trials):
-        dead = set(rng.choice(m_phys, size=num_failures, replace=False).tolist())
-        try:
-            contribution_weights(m_phys, replication, dead)
-            ok += 1
-        except RuntimeError:
-            pass
-    return ok / trials
+    physical nodes (validates the sqrt(M) claim; see tests).
+
+    Thin wrapper over :func:`repro.core.faults.completion_probability` with
+    the ``"random"`` schedule; use that module directly for the correlated
+    (rack) and rolling schedules swept by
+    ``benchmarks/bench_fault_tolerance.py``.
+    """
+    from .faults import completion_probability
+    return completion_probability(m_logical, replication, num_failures,
+                                  trials=trials, kind="random", seed=seed)

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .netmodel import EC2_2013, Fabric
+from .replication import DeadLogicalNode
 from .sparse_vec import HashPerm, IDENTITY_PERM, sort_coalesce_np, tree_sum_np
 from .topology import ButterflyPlan
 
@@ -53,8 +54,8 @@ class ReduceStats:
         return sum(s.total_bytes for s in self.stages)
 
 
-class DeadLogicalNode(RuntimeError):
-    """All replicas of a logical node are dead — protocol cannot complete."""
+# DeadLogicalNode lives in repro.core.replication (shared with the device
+# backend's contribution_weights); re-exported here for back-compat.
 
 
 class SimSparseAllreduce:
@@ -82,6 +83,11 @@ class SimSparseAllreduce:
         self.merge_ns = merge_ns_per_entry
         self.w = value_width
         self._configured = False
+        bad = self.dead - set(range(self.m * self.r))
+        if bad:
+            raise ValueError(
+                f"dead ids {sorted(bad)} outside [0, {self.m * self.r}) — "
+                f"failure injection would silently be a no-op")
         for n in range(self.m):
             if not self._alive(n):
                 raise DeadLogicalNode(f"logical node {n}: all {self.r} replicas dead")

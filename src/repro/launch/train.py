@@ -45,6 +45,15 @@ def main(argv=None):
                     help="per-butterfly-layer merge for sparse sync: full "
                          "re-sort, the fused Pallas rank-merge pipeline, or "
                          "its band-limited (near-linear tile work) variant")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="r-way replicated data parallelism (paper SV fault "
+                         "tolerance): the data axis hosts dp/r logical batch "
+                         "shards, each fed to r devices; gradient sync takes "
+                         "each shard from its first alive replica")
+    ap.add_argument("--dead", default="",
+                    help="comma-separated dead data-slot ids to mask "
+                         "(simulated failures; survivable iff every replica "
+                         "group keeps an alive member, else DeadLogicalNode)")
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-parallel size (0 = all devices)")
     ap.add_argument("--model-axis", type=int, default=1)
@@ -65,8 +74,13 @@ def main(argv=None):
     dsize = args.data_axis or (ndev // args.model_axis)
     mesh = jax.make_mesh((dsize, args.model_axis), ("data", "model"))
     mc = mesh_ctx(mesh)
+    dead = {int(x) for x in args.dead.split(",") if x} or None
+    repl = ""
+    if args.replication > 1 or dead:
+        repl = (f" replication={args.replication}"
+                f" dead={sorted(dead) if dead else []}")
     print(f"mesh data={dsize} model={args.model_axis}; arch={cfg.name} "
-          f"({cfg.param_count()/1e6:.1f}M params) sync={args.sync}")
+          f"({cfg.param_count()/1e6:.1f}M params) sync={args.sync}{repl}")
 
     dp_degrees = None
     if args.dp_degrees:
@@ -78,7 +92,8 @@ def main(argv=None):
                               dp_degrees=dp_degrees,
                               sparse_tokens_hint=max(
                                   8, args.batch * args.seq // dsize),
-                              sync_merge=args.merge)
+                              sync_merge=args.merge,
+                              replication=args.replication, dead=dead)
     params = T.init_params(cfg, mc.tp, seed=args.seed)
     opt_state = AdamW().init(params)
     batcher = iter(Batcher(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
@@ -86,6 +101,7 @@ def main(argv=None):
 
     t_start = time.time()
     rng = np.random.RandomState(args.seed)
+    r = args.replication
     for i in range(args.steps):
         toks, labels = next(batcher)
         batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
@@ -95,6 +111,11 @@ def main(argv=None):
         if cfg.enc_layers:
             batch["enc_frames"] = jnp.asarray(
                 rng.randn(args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if r > 1:
+            # mirror the logical batch onto every replica slab: device
+            # i + j*(data/r) sees logical shard i's rows for all j
+            batch = {k: jnp.tile(v, (r,) + (1,) * (v.ndim - 1))
+                     for k, v in batch.items()}
         params, opt_state, m = step(params, opt_state, batch)
         if i % 10 == 0 or i == args.steps - 1:
             dt = time.time() - t_start

@@ -156,16 +156,28 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
                hier_plan: Optional[DevicePlan],
                sparse_plan: Optional[DevicePlan],
                sparse_edges, token_ids,
-               merge: str = "sort") -> Tuple[Any, jax.Array]:
-    """Combine per-device grads into the grad of the global mean loss."""
+               merge: str = "sort",
+               repl_weight: Optional[jax.Array] = None,
+               dp_logical: Optional[int] = None) -> Tuple[Any, jax.Array]:
+    """Combine per-device grads into the grad of the global mean loss.
+
+    ``repl_weight`` (r-way replicated data parallelism, paper §V): this
+    device's scalar ``contribution_weights`` entry.  Replica groups hold
+    identical batch shards, so scaling every gradient leaf by the weight
+    before the data-axis sum counts each logical shard exactly once — from
+    its first alive replica — and the mean divides by ``dp_logical``
+    (= dp / r) instead of dp.
+    """
     spec = full_model_spec_tuples(cfg, mc.tp)
-    dp = float(mc.dp)
+    dp = float(dp_logical if dp_logical is not None else mc.dp)
     overflow = jnp.zeros((), jnp.int32)
 
     def leaf_sync(path, g, s):
         nonlocal overflow
         if cfg.fsdp and any(d == "fsdp" for d in s):
             return g / dp          # transpose already summed over data
+        if repl_weight is not None:
+            g = g * repl_weight.astype(g.dtype)
         if mode == "sparse" and path == ("emb",) and not cfg.tie_embeddings:
             synced, ovf = sparse_sync_rows(
                 g, token_ids, mc, sparse_plan, sparse_edges, merge=merge)
@@ -266,7 +278,9 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     aux_weight: float = 0.01, donate: bool = True,
                     microbatch: int = 1,
                     sparse_tokens_hint: Optional[int] = None,
-                    sync_merge: str = "sort"):
+                    sync_merge: str = "sort",
+                    replication: int = 1,
+                    dead: Optional[set] = None):
     """Returns (step_fn, specs) — step_fn is jit-compiled with shardings.
 
     step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
@@ -281,6 +295,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     steps (lax.scan) — bounds activation / MoE-dispatch memory; gradients
     are synced once per step, after accumulation (so the paper's allreduce
     sees the full-batch sparsity union, as in its mini-batch use case).
+
+    ``replication=r`` (paper §V fault tolerance) treats the flattened data
+    axes (size dp) as dp/r logical batch shards hosted r-way redundantly
+    per ``repro.core.replication.replica_groups`` — the launcher feeds each
+    replica group the same batch shard (train.py tiles the logical batch r
+    times) and gradient sync takes every logical contribution from its
+    first alive replica via ``contribution_weights``, so step results are
+    unchanged by any ``dead`` set that leaves each group one alive member.
+    Raises ``DeadLogicalNode`` otherwise (with r=1, on any failure).
     """
     from repro.core.allreduce import MERGE_MODES
     if sync_merge not in MERGE_MODES:
@@ -289,6 +312,20 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     mc = mesh_ctx(mesh)
     ax = mc.axis_ctx(cfg)
     opt = opt or AdamW()
+    repl_weights = None
+    dp_logical = mc.dp
+    if replication > 1 or dead:
+        from repro.core.replication import contribution_weights
+        if cfg.fsdp and replication > 1:
+            raise ValueError(
+                "replication>1 is unsupported with fsdp: the per-period "
+                "all_gather transpose sums FSDP leaf grads over data before "
+                "contribution weights could mask replicas")
+        if mc.dp % replication:
+            raise ValueError(f"dp={mc.dp} not divisible by r={replication}")
+        # raises DeadLogicalNode if a whole replica group is dead
+        repl_weights = contribution_weights(mc.dp, replication, dead)
+        dp_logical = mc.dp // replication
     pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
     dspec = P(mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0])
 
@@ -351,9 +388,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                            jnp.zeros((), jnp.float32)), mb_batch)
             grads = jax.tree.map(lambda g: g / microbatch, grads)
             loss, aux = loss / microbatch, aux / microbatch
+        repl_w = None
+        if repl_weights is not None:
+            # flat data-parallel index, row-major over the dp axes (the
+            # same order batch rows shard), selects this device's weight
+            flat = jnp.zeros((), jnp.int32)
+            for a in mc.dp_axes:
+                flat = flat * mesh.shape[a] + lax.axis_index(a)
+            repl_w = jnp.asarray(repl_weights)[flat]
         grads, overflow = sync_grads(grads, cfg, mc, sync, hier_plan,
                                      sparse_plan, edges, tokens,
-                                     merge=sync_merge)
+                                     merge=sync_merge, repl_weight=repl_w,
+                                     dp_logical=dp_logical)
         gnorm = _sharded_grad_norm(grads, cfg, mc)
         new_params, new_opt, _ = opt.update(grads, opt_state, params,
                                             gnorm=gnorm)

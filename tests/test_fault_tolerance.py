@@ -1,0 +1,422 @@
+"""Fault tolerance (paper §V): replication properties, failure schedules,
+the generalized birthday bound, and device-vs-sim parity under identical
+failure schedules (subprocess: up to 16 forced host devices)."""
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.faults import (SCHEDULE_KINDS, FailureSchedule,
+                               analytic_completion_probability,
+                               completion_probability, make_schedule)
+from repro.core.replication import (DeadLogicalNode, contribution_weights,
+                                    expected_tolerated_failures,
+                                    first_alive_replicas, replica_groups,
+                                    simulate_random_failures)
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=16",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src")
+            + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _draw_dead(m_phys: int, seed: int, frac: float):
+    rng = np.random.RandomState(seed)
+    k = int(round(frac * m_phys))
+    return set(rng.choice(m_phys, size=k, replace=False).tolist())
+
+
+# ---------------------------------------------------------------------------
+# contribution_weights / replica_groups properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 10), st.integers(1, 3), st.integers(0, 10_000),
+       st.floats(0.0, 0.9))
+@settings(max_examples=60, deadline=None)
+def test_weights_one_unit_per_group_property(m_logical, r, seed, frac):
+    """Exactly one unit weight per replica group, on an alive member, for
+    every (M, r, dead); raises DeadLogicalNode iff some group <= dead."""
+    m_phys = m_logical * r
+    dead = _draw_dead(m_phys, seed, frac)
+    groups = replica_groups(m_phys, r)
+    assert sorted(d for g in groups for d in g) == list(range(m_phys))
+    assert all(len(g) == r for g in groups)
+    some_group_lost = any(all(d in dead for d in g) for g in groups)
+    if some_group_lost:
+        with pytest.raises(DeadLogicalNode):
+            contribution_weights(m_phys, r, dead)
+        return
+    w = contribution_weights(m_phys, r, dead)
+    assert w.shape == (m_phys,) and w.dtype == np.float32
+    assert set(np.unique(w)) <= {0.0, 1.0}
+    for g in groups:
+        ws = [w[d] for d in g]
+        assert sum(ws) == 1.0
+        chosen = g[ws.index(1.0)]
+        assert chosen not in dead
+        # first *alive* member of the group carries the weight
+        assert chosen == next(d for d in g if d not in dead)
+    fa = first_alive_replicas(m_phys, r, dead)
+    assert [w[p] for p in fa] == [1.0] * m_logical
+    assert [p % m_logical for p in fa] == list(range(m_logical))
+
+
+@given(st.integers(2, 10), st.integers(1, 3), st.integers(0, 10_000),
+       st.floats(0.0, 0.6))
+@settings(max_examples=40, deadline=None)
+def test_weights_permutation_equivariant(m_logical, r, seed, frac):
+    """Relabeling logical shards commutes with the weight computation:
+    for pi(i + j*M) = sigma(i) + j*M, weights(pi(dead))[pi(p)] ==
+    weights(dead)[p] — the weights depend on the dead set only through
+    the replica-group structure, not on shard identities."""
+    m_phys = m_logical * r
+    dead = _draw_dead(m_phys, seed, frac)
+    groups = replica_groups(m_phys, r)
+    if any(all(d in dead for d in g) for g in groups):
+        return  # raise case covered by the other property
+    sigma = np.random.RandomState(seed + 1).permutation(m_logical)
+
+    def pi(p):
+        return int(sigma[p % m_logical]) + (p // m_logical) * m_logical
+
+    w = contribution_weights(m_phys, r, dead)
+    w2 = contribution_weights(m_phys, r, {pi(d) for d in dead})
+    assert all(w2[pi(p)] == w[p] for p in range(m_phys))
+
+
+def test_replica_groups_validation():
+    with pytest.raises(ValueError):
+        replica_groups(8, 3)
+    with pytest.raises(ValueError):
+        replica_groups(8, 0)
+
+
+def test_out_of_range_dead_ids_rejected():
+    """Dead ids beyond the physical id space would silently inject no
+    failure at all — both backends reject them instead."""
+    from repro.core.simulator import SimSparseAllreduce
+    from repro.core.topology import ButterflyPlan
+    with pytest.raises(ValueError):
+        contribution_weights(8, 2, dead={3, 8})
+    with pytest.raises(ValueError):
+        SimSparseAllreduce(ButterflyPlan(4, (4,)), replication=2, dead={99})
+
+
+def test_device_plan_stage0_is_replica_merge():
+    """make_device_plan(replication=r) prepends a stage whose mixed-radix
+    groups are exactly replica_groups (digit 0 most significant)."""
+    from repro.core.allreduce import make_device_plan
+    for degs, r in [((4,), 2), ((2, 2), 2), ((4, 2), 2), ((2, 2), 3)]:
+        m_log = math.prod(degs)
+        m_phys = m_log * r
+        plan = make_device_plan([("d", m_phys)], {"d": degs}, 32, 128,
+                                replication=r)
+        assert plan.replication == r and plan.num_logical == m_log
+        assert plan.logical.degrees == (r,) + degs
+        got = [sorted(g) for g in plan.stages[0].axis_index_groups]
+        assert got == replica_groups(m_phys, r)
+        assert plan.replica_groups() == replica_groups(m_phys, r)
+    with pytest.raises(ValueError):
+        make_device_plan([("d", 8)], {"d": (4,)}, 8, 8, replication=3)
+
+
+# ---------------------------------------------------------------------------
+# failure schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", SCHEDULE_KINDS)
+def test_schedule_deterministic_and_sized(kind):
+    a = make_schedule(kind, 24, 7, seed=5)
+    b = FailureSchedule(kind=kind, m_physical=24, num_failures=7, seed=5)
+    for t in range(6):
+        da, db = a.dead_at(t), b.dead_at(t)
+        assert da == db
+        assert len(da) == 7 and all(0 <= d < 24 for d in da)
+    assert list(a.steps(3)) == [a.dead_at(0), a.dead_at(1), a.dead_at(2)]
+    assert make_schedule(kind, 24, 0).dead_at(3) == set()
+    # different seeds / steps decorrelate (deterministically checkable)
+    assert make_schedule(kind, 24, 7, seed=6).dead_at(0) != a.dead_at(0)
+
+
+def test_schedule_rolling_is_contiguous_window():
+    s = make_schedule("rolling", 20, 6, seed=3)
+    for t in range(5):
+        dead = sorted(s.dead_at(t))
+        start = (3 + t * 6) % 20
+        assert set(dead) == {(start + i) % 20 for i in range(6)}
+
+
+def test_schedule_rack_is_rack_correlated():
+    s = make_schedule("rack", 32, 10, seed=1, rack_size=4)
+    for t in range(4):
+        dead = s.dead_at(t)
+        racks = {d // 4 for d in dead}
+        assert len(racks) <= -(-10 // 4)  # at most ceil(f/rack) racks hit
+        # all but (at most) one rack are fully dead
+        partial = [rk for rk in racks
+                   if not all(4 * rk + i in dead for i in range(4))]
+        assert len(partial) <= 1
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        make_schedule("cosmic", 8, 1)
+    with pytest.raises(ValueError):
+        make_schedule("random", 8, 9)
+    with pytest.raises(ValueError):
+        FailureSchedule(kind="rack", m_physical=8, num_failures=2,
+                        rack_size=0)
+
+
+# ---------------------------------------------------------------------------
+# generalized birthday bound (§V-A)
+# ---------------------------------------------------------------------------
+
+def test_generalized_bound_closed_forms():
+    # r=2 is exactly the paper's sqrt(pi*M/2); r=1 means the first failure
+    # is fatal; higher r tolerates more (M^(1-1/r) scaling), capped by M*r.
+    for m in (16, 64, 256):
+        assert expected_tolerated_failures(m, 2) == \
+            pytest.approx(math.sqrt(math.pi * m / 2))
+        assert expected_tolerated_failures(m, 1) == pytest.approx(1.0)
+        b = [expected_tolerated_failures(m, r) for r in (1, 2, 3, 4)]
+        assert all(x < y for x, y in zip(b, b[1:]))
+        assert b[-1] < 4 * m
+    with pytest.raises(ValueError):
+        expected_tolerated_failures(8, 0)
+
+
+def test_birthday_regression_smoke():
+    """Fast fixed-seed check that the empirical completion probability
+    tracks the §V-A analytic curve around the bound."""
+    m, r = 36, 2
+    f = int(round(expected_tolerated_failures(m, r)))
+    p = simulate_random_failures(m, r, f, trials=200, seed=0)
+    assert abs(p - analytic_completion_probability(m, r, f)) < 0.12
+    assert simulate_random_failures(m, r, 1, trials=100) == 1.0
+    assert simulate_random_failures(m, r, 2 * f, trials=200) < p
+
+
+@pytest.mark.slow
+def test_birthday_regression_analytic_tolerance():
+    """simulate_random_failures at ~sqrt(M) (and the r=3 analogue) stays
+    within the generalized birthday bound's analytic tolerance."""
+    m, r = 256, 2
+    f = int(round(expected_tolerated_failures(m, r)))   # ~20 ~ 1.25*sqrt(M)
+    p = simulate_random_failures(m, r, f, trials=2000, seed=0)
+    assert abs(p - analytic_completion_probability(m, r, f)) < 0.06
+    # sweep is monotone decreasing in failure count
+    ps = [simulate_random_failures(m, r, k, trials=600, seed=1)
+          for k in (f // 2, f, 2 * f)]
+    assert ps[0] > ps[1] > ps[2]
+    # r=3: M^(2/3) scaling
+    m3, r3 = 64, 3
+    f3 = int(round(expected_tolerated_failures(m3, r3)))
+    p3 = completion_probability(m3, r3, f3, trials=1500, seed=0)
+    assert abs(p3 - analytic_completion_probability(m3, r3, f3)) < 0.06
+
+
+# ---------------------------------------------------------------------------
+# DeadLogicalNode parity (host-side: raises before any mesh is touched)
+# ---------------------------------------------------------------------------
+
+def test_dead_group_raises_on_both_backends():
+    from repro.core.api import SparseAllreduce
+    from repro.core.simulator import SimSparseAllreduce
+    from repro.core.topology import ButterflyPlan
+    lost = {0, 4}                       # whole replica group of shard 0
+    with pytest.raises(DeadLogicalNode):
+        SimSparseAllreduce(ButterflyPlan(4, (4,)), replication=2, dead=lost)
+    ar = SparseAllreduce(4, (4,), backend="device", replication=2, dead=lost)
+    out = [np.arange(3, dtype=np.uint32)] * 4
+    with pytest.raises(DeadLogicalNode):
+        ar.config(out, out)
+    with pytest.raises(DeadLogicalNode):
+        ar.union_reduce(np.zeros((4, 8), np.uint32),
+                        np.zeros((4, 8), np.float32), 32)
+    # r=1: no redundancy, any failure is fatal — on both backends
+    with pytest.raises(DeadLogicalNode):
+        SimSparseAllreduce(ButterflyPlan(4, (4,)), dead={2})
+    with pytest.raises(DeadLogicalNode):
+        SparseAllreduce(4, (4,), backend="device", dead={2}).config(out, out)
+
+
+# ---------------------------------------------------------------------------
+# device-vs-sim parity under identical failure schedules (subprocess)
+# ---------------------------------------------------------------------------
+
+PARITY_PRELUDE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.api import SparseAllreduce
+from repro.core.faults import make_schedule
+from repro.core.replication import DeadLogicalNode, replica_groups
+from repro.core.simulator import SimSparseAllreduce
+from repro.core.sparse_vec import HashPerm
+from repro.core.topology import ButterflyPlan
+
+DEVS = np.array(jax.devices())
+def mesh_of(n):
+    return jax.sharding.Mesh(DEVS[:n], ("nodes",))
+
+def survivable(m_phys, r, dead):
+    return all(any(d not in dead for d in g)
+               for g in replica_groups(m_phys, r))
+
+def dead_sets(m_phys, r, seed):
+    # identical deterministic schedule on both backends: empty, the first
+    # survivable random-1 steps, and r-1 dead replicas of shard 0
+    out = [set()]
+    if r > 1:
+        sched = make_schedule("random", m_phys, 1, seed=seed)
+        out += [d for d in sched.steps(4) if survivable(m_phys, r, d)][:2]
+        out.append(set(replica_groups(m_phys, r)[0][: r - 1]))
+    return out
+
+R_IDX = 400
+def workload(M, seed):
+    rng = np.random.RandomState(seed)
+    out_idx = [rng.choice(R_IDX, rng.randint(8, 24),
+                          replace=False).astype(np.uint32) for _ in range(M)]
+    # dyadic-lattice values: any summation order is bit-exact in fp32, so
+    # replicated-vs-baseline-vs-sim comparisons can demand bit identity
+    out_val = [(rng.randint(-128, 129, len(o)) / 64.0).astype(np.float32)
+               for o in out_idx]
+    return out_idx, out_val
+"""
+
+
+PLANNED_PARITY_CODE = PARITY_PRELUDE + r"""
+for degs in [(4,), (2, 2), (4, 2)]:
+    M = int(np.prod(degs))
+    out_idx, out_val = workload(M, seed=M)
+    rng = np.random.RandomState(M + 1)
+    in_idx = [rng.choice(R_IDX, rng.randint(5, 16),
+                         replace=False).astype(np.uint32) for _ in range(M)]
+    base = SparseAllreduce(M, degs, backend="device", mesh=mesh_of(M), seed=M)
+    base.config(out_idx, in_idx)
+    want = base.reduce(out_val)
+    for r in (1, 2):
+        m_phys = M * r
+        for dead in dead_sets(m_phys, r, seed=M):
+            ar = SparseAllreduce(M, degs, backend="device", replication=r,
+                                 dead=dead or None, mesh=mesh_of(m_phys),
+                                 seed=M)
+            ar.config(out_idx, in_idx)
+            got = ar.reduce(out_val)
+            sim = SimSparseAllreduce(ButterflyPlan(M, degs), replication=r,
+                                     dead=dead or None, perm=HashPerm.make(M))
+            sim.config(out_idx, in_idx)
+            sgot = sim.reduce(out_val)
+            for n in range(M):
+                # bit-identical to the fault-free non-replicated reduce...
+                np.testing.assert_array_equal(got[n], want[n],
+                                              err_msg=f"{degs} r={r} {dead}")
+                # ...and to the simulator under the identical schedule
+                np.testing.assert_array_equal(
+                    got[n], np.asarray(sgot[n], np.float32),
+                    err_msg=f"sim {degs} r={r} {dead}")
+        if r > 1:
+            lost = set(replica_groups(m_phys, r)[1])
+            try:
+                SimSparseAllreduce(ButterflyPlan(M, degs), replication=r,
+                                   dead=lost)
+                raise SystemExit(f"sim accepted lost group {degs}")
+            except DeadLogicalNode:
+                pass
+            try:
+                ar = SparseAllreduce(M, degs, backend="device", replication=r,
+                                     dead=lost, mesh=mesh_of(m_phys), seed=M)
+                ar.config(out_idx, in_idx)
+                raise SystemExit(f"device accepted lost group {degs}")
+            except DeadLogicalNode:
+                pass
+print("PLANNED_PARITY_OK")
+"""
+
+
+UNION_PARITY_CODE = PARITY_PRELUDE + r"""
+merge = "%(merge)s"
+C = 24
+for degs in [(4,), (2, 2), (4, 2)]:
+    M = int(np.prod(degs))
+    out_idx, out_val = workload(M, seed=M)
+    perm = HashPerm.make(M)
+    idx = np.full((M, C), 0xFFFFFFFF, np.uint32)
+    val = np.zeros((M, C), np.float32)
+    for n in range(M):
+        h = perm.fwd_np(out_idx[n]); o = np.argsort(h)
+        idx[n, :len(h)] = h[o]; val[n, :len(h)] = out_val[n][o]
+    # the union in user space, ordered by hash — the sim's request list
+    uraw = np.unique(np.concatenate(out_idx))
+    uraw = uraw[np.argsort(perm.fwd_np(uraw))]
+    nu = len(uraw)
+    base = SparseAllreduce(M, degs, backend="device", mesh=mesh_of(M),
+                           seed=M, merge=merge)
+    bi, bv, bovf = (np.asarray(x) for x in
+                    base.union_reduce(idx, val, out_capacity=M * C))
+    assert bovf.sum() == 0
+    for r in (1, 2):
+        m_phys = M * r
+        for dead in dead_sets(m_phys, r, seed=M):
+            ar = SparseAllreduce(M, degs, backend="device", replication=r,
+                                 dead=dead or None, mesh=mesh_of(m_phys),
+                                 seed=M, merge=merge)
+            oi, ov, ovf = (np.asarray(x) for x in
+                           ar.union_reduce(idx, val, out_capacity=M * C))
+            assert ovf.sum() == 0, (degs, r, dead)
+            # bit-identical unions (indices AND values) vs the fault-free
+            # non-replicated run, for every node
+            np.testing.assert_array_equal(oi, bi)
+            np.testing.assert_array_equal(ov, bv)
+            # sim with the identical schedule, requesting the full union
+            sim = SimSparseAllreduce(ButterflyPlan(M, degs), replication=r,
+                                     dead=dead or None, perm=perm)
+            sim.config(out_idx, [uraw] * M)
+            sgot = sim.reduce(out_val)
+            for n in range(M):
+                assert np.array_equal(oi[n][:nu], perm.fwd_np(uraw))
+                assert (oi[n][nu:] == 0xFFFFFFFF).all()
+                np.testing.assert_array_equal(
+                    ov[n][:nu], np.asarray(sgot[n], np.float32),
+                    err_msg=f"sim {degs} r={r} {dead}")
+        if r > 1:
+            lost = set(replica_groups(m_phys, r)[0])
+            try:
+                ar = SparseAllreduce(M, degs, backend="device", replication=r,
+                                     dead=lost, mesh=mesh_of(m_phys),
+                                     seed=M, merge=merge)
+                ar.union_reduce(idx, val, out_capacity=M * C)
+                raise SystemExit(f"device union accepted lost group {degs}")
+            except DeadLogicalNode:
+                pass
+print("UNION_PARITY_OK_" + merge)
+"""
+
+
+@pytest.mark.slow
+def test_planned_parity_device_vs_sim():
+    """Replicated device config/reduce == fault-free non-replicated device
+    reduce == simulator, bit-identically, under identical failure
+    schedules, swept over degrees x r."""
+    assert "PLANNED_PARITY_OK" in _run(PLANNED_PARITY_CODE)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("merge", ["sort", "fused", "banded"])
+def test_union_parity_device_vs_sim(merge):
+    """Replicated union allreduce: bit-identical unions and sums vs the
+    fault-free non-replicated run and vs the simulator, for every merge
+    mode, under identical failure schedules."""
+    assert ("UNION_PARITY_OK_" + merge) in _run(
+        UNION_PARITY_CODE % {"merge": merge})
