@@ -219,6 +219,88 @@ def bench_fig9_pagerank_comparison() -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# Fig 8/9 on the device backend: the iterative graph engine
+# ---------------------------------------------------------------------------
+
+def bench_fig8_fig9_device_engine() -> List[Row]:
+    """Device-backed fig8/fig9 rows: k PageRank rounds through the
+    device-resident engine (``repro.graph.engine`` — ONE jitted dispatch
+    and host round-trip per ``run(k)``) vs the per-iteration device path
+    (host staging + one ``SparseAllreduce.reduce`` dispatch per round —
+    the pre-engine way).  The derived column is the per-round sync-count
+    report: dispatches / host round-trips per k-round run and the
+    butterfly ``all_to_all`` phases each round pays on-network.
+
+    Off-TPU both paths run on forced host devices (benchmarks/run.py sets
+    XLA_FLAGS), SpMV on the jnp ELL path — wall times are amortization
+    evidence (dispatch/staging overhead), not TPU perf; the graph is kept
+    small because interpret-mode and ELL hub padding dominate at scale.
+    Sizes beyond the available device count emit a ``skipped`` row."""
+    import jax
+
+    from repro.core import SparseAllreduce
+    from repro.graph.pagerank import (assemble_pagerank_scores,
+                                      make_pagerank_engine)
+
+    rows = []
+    n, e, iters, damping = 3000, 24000, 10, 0.85
+    edges = powerlaw_graph(n, e, alpha=2.0, seed=0)
+    ref = pagerank_dense_reference(edges, n, iters=iters)
+    t_engine8 = t_periter8 = None
+    for m in (4, 8):
+        if len(jax.devices()) < m:
+            rows.append((f"fig8/pagerank_device_M{m}", -1.0,
+                         f"skipped: needs {m} devices"))
+            continue
+        mesh = jax.sharding.Mesh(np.array(jax.devices())[:m], ("nodes",))
+        degs = tune(m, n0=e / m, total_range=n).degrees
+        parts = build_partitions(edges, n, m)
+        engine, extras, p0 = make_pagerank_engine(parts, n, degs,
+                                                  damping=damping, mesh=mesh)
+        engine.run(iters, p0, extras)                 # compile once
+        t_eng = _timeit(lambda: engine.run(iters, p0, extras))
+        rep = engine.sync_report()
+        _, last_q, _ = engine.run(iters, p0, extras)
+        scores = assemble_pagerank_scores(parts, last_q, n, damping)
+        err = float(np.max(np.abs(scores - ref)))
+        rows.append((
+            f"fig8/pagerank_device_M{m}", t_eng,
+            f"rounds={iters},dispatches_per_run=1,host_roundtrips_per_run=1,"
+            f"collectives_per_round={rep['reduce_collectives_per_round']},"
+            f"max_err={err:.1e},plan={'x'.join(map(str, degs))}"))
+
+        # per-iteration device baseline: one reduce dispatch per round
+        ar = SparseAllreduce(m, degs, backend="device", mesh=mesh)
+        ar.config([p.out_idx.astype(np.uint32) for p in parts],
+                  [p.in_idx.astype(np.uint32) for p in parts])
+
+        def per_iter(parts=parts, ar=ar):
+            p_in = [np.full(len(p.in_idx), 1.0 / n) for p in parts]
+            for _ in range(iters):
+                q = [p.spmv(p_in[i]) for i, p in enumerate(parts)]
+                ins = ar.reduce(q)
+                p_in = [(1 - damping) / n + damping * ins[i]
+                        for i in range(m)]
+
+        per_iter()                                    # compile once
+        t_per = _timeit(per_iter)
+        rows.append((
+            f"fig8/pagerank_device_periter_M{m}", t_per,
+            f"rounds={iters},dispatches_per_run={iters},"
+            f"host_roundtrips_per_run={iters},"
+            f"collectives_per_round={rep['reduce_collectives_per_round']}"))
+        if m == 8:
+            t_engine8, t_periter8 = t_eng, t_per
+    if t_engine8 is not None:
+        rows.append((
+            "fig9/pagerank_engine_vs_periter_M8", t_engine8,
+            f"periter_us={t_periter8:.1f},"
+            f"amortization_win={t_periter8 / max(t_engine8, 1e-9):.2f}x,"
+            "one_dispatch_per_10_rounds"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # beyond paper: kernel microbenches + grad-sync crossover
 # ---------------------------------------------------------------------------
 
@@ -337,6 +419,7 @@ ALL_BENCHES = [
     bench_table2_fault_tolerance,
     bench_fig8_scaling,
     bench_fig9_pagerank_comparison,
+    bench_fig8_fig9_device_engine,
     bench_kernels,
     bench_merge_modes,
     bench_grad_sync_crossover,

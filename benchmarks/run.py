@@ -13,6 +13,14 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
+    # The device-backed graph-engine rows (fig8/fig9) need a multi-device
+    # mesh; off-TPU, force host devices BEFORE jax is first imported (the
+    # benchmark modules below pull it in).  Respect a caller-set flag.
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="",
                     help="also write results as a JSON list of "

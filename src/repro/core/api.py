@@ -70,6 +70,7 @@ class SparseAllreduce:
         self.replication = replication
         self.dead = dead
         self.mesh = mesh
+        self._mesh_used = None       # mesh bound at config (device backend)
         self._sim: Optional[SimSparseAllreduce] = None
         self._planned = None
         self._reduce_fn = None
@@ -88,6 +89,19 @@ class SparseAllreduce:
     # ------------------------------------------------------------------
     def config(self, out_indices: Sequence[np.ndarray],
                in_indices: Sequence[np.ndarray]) -> ReduceStats:
+        """The paper's ``config`` call — run once per index pattern.
+
+        ``out_indices`` / ``in_indices``: one uint32 array per *logical*
+        node (sorted-unique not required for out; in defines the order of
+        the per-node result rows).  Freezes all routing: on ``sim`` it
+        builds the message-level schedule; on ``device`` it plans the
+        static gather/scatter tensors and jit-compiles the reduce
+        (``plan_sparse_allreduce`` + ``make_reduce_fn``), binding the mesh
+        (``self.mesh`` or a fresh one over all devices).  Returns modeled
+        ``ReduceStats`` from a simulator shadow config on both backends.
+        Amortization contract: every subsequent :meth:`reduce` (any number
+        of iterations) reuses this plan; re-calling ``config`` re-plans.
+        """
         self._in_lens = [len(i) for i in in_indices]
         self._out_lens = [len(o) for o in out_indices]
         self._staging = None                  # re-config invalidates staging
@@ -115,6 +129,7 @@ class SparseAllreduce:
                         f"({self.num_nodes} logical x r={r})")
                 mesh = jax.make_mesh((m_phys,), ("nodes",))
             axis = mesh.axis_names[0]
+            self._mesh_used = mesh
             dplan = make_device_plan(
                 [(axis, m_phys)], {axis: self.plan.degrees},
                 in_capacity=max(self._out_lens),
@@ -232,8 +247,64 @@ class SparseAllreduce:
         return oi, ov, ovf
 
     # ------------------------------------------------------------------
+    # Plan-reuse hooks (device backend).  :meth:`reduce` pays one host
+    # staging + one device dispatch per call; iterative workloads that can
+    # keep their state on device should instead compose the frozen plan
+    # into their own jitted loop via these hooks — ``repro.graph.engine``
+    # does exactly that (k rounds, one dispatch).
+    # ------------------------------------------------------------------
+
+    def planned_parts(self) -> Tuple["object", "object"]:
+        """``(PlannedSparseAllreduce, mesh)`` bound at :meth:`config` time.
+
+        Device backend only, after ``config``.  ``planned.reduce_on_device``
+        is the shard_map body (per-device ``[u_cap(,W)] -> [uin_cap(,W)]``),
+        ``planned.device_args()`` the iteration-invariant routing tensors —
+        everything needed to embed the reduce inside a caller-owned
+        shard_map / ``lax.scan`` without re-planning or re-tracing.
+        """
+        if self.backend != "device":
+            raise ValueError("planned_parts() requires backend='device'")
+        if self._planned is None:
+            raise RuntimeError("call config() before planned_parts()")
+        return self._planned, self._mesh_used
+
+    @property
+    def reduce_fn(self):
+        """The raw jitted reduce callable (device backend, after config):
+        ``[num_physical, u_cap(,W)] jnp array -> [num_physical, uin_cap(,W)]``.
+        This is what :meth:`reduce` invokes after host-side staging; callers
+        holding device-resident staged values can call it directly and skip
+        the numpy round-trip."""
+        if self._reduce_fn is None:
+            raise RuntimeError(
+                "reduce_fn requires backend='device' and a prior config()")
+        return self._reduce_fn
+
+    def staging_metadata(self) -> dict:
+        """Static staging layout frozen by :meth:`config` (device backend):
+        ``u_cap`` / ``uin_cap`` (per-device value capacities),
+        ``out_lens`` / ``in_lens`` (per-logical-node valid lengths inside
+        those capacities), ``first_alive`` (physical replica each logical
+        result is read from) and ``num_physical``.  Everything a caller
+        needs to build ``reduce_fn`` inputs / slice its outputs without
+        private attribute access."""
+        if self._planned is None:
+            raise RuntimeError("call config() before staging_metadata()")
+        return {
+            "u_cap": self._planned.u_cap,
+            "uin_cap": self._planned.uin_cap,
+            "out_lens": list(self._out_lens),
+            "in_lens": list(self._in_lens),
+            "first_alive": list(self._first_alive),
+            "num_physical": self.num_physical,
+        }
+
     @property
     def stats(self) -> Optional[ReduceStats]:
+        """Message-level :class:`ReduceStats` of the last :meth:`reduce`
+        (sim backend only; the device backend returns modeled stats from
+        :meth:`config`'s shadow sim instead)."""
         if self.backend == "sim" and self._sim is not None:
             return getattr(self._sim, "reduce_stats", None)
         return None

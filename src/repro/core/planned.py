@@ -49,11 +49,30 @@ class _LayerMaps:
 
 @dataclasses.dataclass
 class PlannedSparseAllreduce:
-    """Static-index sparse allreduce bound to a mesh.
+    """Static-index sparse allreduce bound to a mesh (device backend only;
+    the simulator analogue is ``SimSparseAllreduce``).
 
-    Build with :func:`plan_sparse_allreduce`.  ``reduce_on_device`` is the
-    shard_map body (composable into a larger step function);
-    ``reduce`` is a standalone jitted host entry point.
+    Build with :func:`plan_sparse_allreduce` (the paper's ``config``) —
+    host-side numpy, run once per index pattern.  Afterwards everything is
+    static and reusable every iteration:
+
+    * :meth:`reduce_on_device` — the shard_map *body*: per-device values
+      ``[u_cap(,W)]`` in, per-device results ``[uin_cap(,W)]`` out.  Pure
+      static-shape JAX, so it composes into larger jitted programs — in
+      particular into a ``lax.scan`` iteration loop (see
+      ``repro.graph.engine``, which fuses a local SpMV with this body to
+      run k PageRank/HADI/spectral rounds in one dispatch).
+    * :meth:`make_reduce_fn` — a standalone jitted host entry point
+      (``[M, u_cap(,W)] -> [M, uin_cap(,W)]``) for per-call use.
+    * :meth:`device_args` / :meth:`arg_specs` — the frozen routing tensors
+      (and their PartitionSpecs) that ``reduce_on_device`` consumes; pass
+      them through your own shard_map sharded over the plan axes.  They are
+      iteration-invariant: hoist them out of any scan.
+
+    Amortization contract: one ``plan_sparse_allreduce`` call amortizes
+    over arbitrarily many ``reduce_on_device`` / ``reduce_fn`` invocations
+    as long as the index pattern (and mesh) is unchanged; values may differ
+    freely.  Width ``W`` (``value_width``) is frozen at plan time.
     """
 
     dplan: DevicePlan
@@ -71,6 +90,27 @@ class PlannedSparseAllreduce:
     # (1.0 on each logical shard's first alive replica, 0.0 elsewhere),
     # applied to the values inside shard_map.  None when not replicated.
     weights: Optional[np.ndarray] = None
+
+    # ---------------------------------------------------------------------
+    @property
+    def u_cap(self) -> int:
+        """Per-device *outbound* value capacity: ``reduce_on_device`` takes
+        ``[u_cap(,W)]`` (node n's first ``len(out_indices[n])`` slots are
+        its user values, the rest zero padding)."""
+        return int(self.user_scatter.shape[1])
+
+    @property
+    def uin_cap(self) -> int:
+        """Per-device *inbound* capacity: ``reduce_on_device`` returns
+        ``[uin_cap(,W)]`` (node n's first ``len(in_indices[n])`` slots are
+        the reduced values in its requested order, the rest zeros)."""
+        return int(self.in_user_len)
+
+    @property
+    def depth(self) -> int:
+        """Butterfly depth — each reduce runs ``depth`` down + ``depth`` up
+        ``all_to_all`` collectives (the per-round sync count)."""
+        return len(self.layers)
 
     # ---------------------------------------------------------------------
     def device_args(self):

@@ -38,15 +38,27 @@ def _fm_estimate(b: np.ndarray) -> float:
 
 def hadi(edges: np.ndarray, n_vertices: int, m: int, degrees=(4, 2),
          max_hops: int = 16, bits: int = 24, trials: int = 4,
-         backend: str = "sim", seed: int = 0) -> Tuple[int, np.ndarray, dict]:
-    """Returns (effective diameter, N(h) curve, stats)."""
+         backend: str = "sim", seed: int = 0, mesh=None
+         ) -> Tuple[int, np.ndarray, dict]:
+    """Returns (effective diameter, N(h) curve, stats).
+
+    ``backend="sim"`` (oracle): per-hop numpy loop through the simulator.
+    ``backend="device"``: the iterative graph engine fuses all
+    ``max_hops`` OR-rounds into one jitted dispatch (per-hop bitstrings
+    collected on device, early-stop applied post-hoc on the host curve —
+    bit-identical to the sim because the 0/1 sums are exact in fp32);
+    ``stats["engine"]`` carries the dispatch/sync report.
+    """
     rng = np.random.RandomState(seed)
     parts = build_partitions(edges, n_vertices, m, seed=seed)
-    ar = SparseAllreduce(m, degrees, backend=backend, seed=seed,
-                         value_width=trials * bits)
     # inbound = read-set for the next hop PLUS own written rows, so every
     # vertex with in-edges receives its updated bitstring somewhere
     req = [np.union1d(p.in_idx, p.out_idx).astype(np.uint32) for p in parts]
+    if backend == "device":
+        return _hadi_device(parts, req, n_vertices, degrees, max_hops,
+                            bits, trials, rng, seed, mesh)
+    ar = SparseAllreduce(m, degrees, backend=backend, seed=seed,
+                         value_width=trials * bits)
     ar.config([p.out_idx.astype(np.uint32) for p in parts], req)
 
     b = fm_bitstrings(n_vertices, bits, trials, rng)  # global (self-bit)
@@ -75,6 +87,70 @@ def hadi(edges: np.ndarray, n_vertices: int, m: int, degrees=(4, 2),
     target = 0.9 * curve[-1]
     eff = int(np.argmax(curve >= target))
     return eff, curve, {"hops_run": len(curve) - 1, "b0": b0, "b_final": b}
+
+
+def _hadi_device(parts, req, n_vertices: int, degrees, max_hops: int,
+                 bits: int, trials: int, rng, seed: int, mesh
+                 ) -> Tuple[int, np.ndarray, dict]:
+    """Device path: all hops in one dispatch, early stop applied post-hoc.
+
+    Per-node state = bitstrings over the node's request set (OR transfers
+    through the additive reduce as sum + clamp; 0/1 sums are exact in
+    fp32, so per-hop strings are bit-identical to the sim oracle).  The
+    scan collects every hop's state (``collect="trajectory"``); the host
+    then assembles the global per-hop strings and applies the same
+    plateau early-stop the sim loop uses, truncating the curve.
+    """
+    from . import engine as eng
+    m, w = len(parts), trials * bits
+
+    def out_fn(s, e):
+        acc = eng.ell_matvec(e["cols"], e["wts"], s)
+        import jax.numpy as jnp
+        return jnp.minimum(acc, 1.0)
+
+    def update_fn(s, in_raw, e, ax):
+        import jax.numpy as jnp
+        return jnp.maximum(s, jnp.minimum(in_raw, 1.0))
+
+    app = eng.EngineApp(name="hadi", out_fn=out_fn, update_fn=update_fn,
+                        value_width=w)
+    engine = eng.GraphEngine(
+        [p.out_idx.astype(np.uint32) for p in parts], req, app,
+        degrees=degrees, mesh=mesh, seed=seed)
+    # edge (src, dst) contributes b[src] to row dst: cols = src position in
+    # the request set, rows = dst position in out_idx, weight 1 (OR)
+    tables = [eng.build_ell(p.dst_pos,
+                            np.searchsorted(req[i], p.src),
+                            np.ones(len(p.src), np.float32),
+                            len(p.out_idx))
+              for i, p in enumerate(parts)]
+    cols, wts = eng.stack_ell(tables, engine.u_cap)
+
+    b0 = fm_bitstrings(n_vertices, bits, trials, rng)
+    state0 = np.zeros((m, engine.uin_cap, w), np.float32)
+    for i, r in enumerate(req):
+        state0[i, : len(r)] = b0[r].reshape(len(r), w)
+    _, _, traj = engine.run(max_hops, state0, {"cols": cols, "wts": wts},
+                            collect="trajectory")
+    traj = np.asarray(traj, np.float64)           # [hops, M, req_cap, w]
+
+    b = b0.copy()
+    curve = [_fm_estimate(b)]
+    for h in range(max_hops):
+        for i, r in enumerate(req):
+            b[r] = np.maximum(b[r],
+                              traj[h, i, : len(r)].reshape(len(r), trials,
+                                                           bits))
+        est = _fm_estimate(b)
+        curve.append(est)
+        if est <= curve[-2] * 1.0001:
+            break
+    curve = np.array(curve)
+    target = 0.9 * curve[-1]
+    eff = int(np.argmax(curve >= target))
+    return eff, curve, {"hops_run": len(curve) - 1, "b0": b0, "b_final": b,
+                        "engine": engine.sync_report()}
 
 
 def hadi_bitstring_reference(edges: np.ndarray, n_vertices: int,

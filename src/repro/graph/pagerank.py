@@ -37,26 +37,23 @@ class Partition:
         np.add.at(out, self.dst_pos, in_values[self.src_pos] * self.inv_outdeg)
         return out
 
+    def ell_tables(self, weights: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded ELL ``(cols, wts)`` of this partition's SpMV — vectorized
+        (``engine.build_ell``: bincount/argsort, no per-edge Python loop);
+        the same construction the device engine stacks across nodes."""
+        from .engine import build_ell
+        w = self.inv_outdeg if weights is None else weights
+        return build_ell(self.dst_pos, self.src_pos, w, len(self.out_idx))
+
     def spmv_ell(self, in_values: np.ndarray, use_kernel: bool = True
                  ) -> np.ndarray:
         """Same product through the blocked ELL Pallas kernel."""
         import jax.numpy as jnp
         from repro.kernels import ops
-        n_out = len(self.out_idx)
-        if n_out == 0:
+        if len(self.out_idx) == 0:
             return np.zeros(0, np.float64)
-        order = np.argsort(self.dst_pos, kind="stable")
-        rows = self.dst_pos[order]
-        counts = np.bincount(rows, minlength=n_out)
-        kmax = max(int(counts.max()), 1)
-        cols = np.full((n_out, kmax), -1, np.int32)
-        wts = np.zeros((n_out, kmax), np.float32)
-        slot = np.zeros(n_out, np.int64)
-        for e in order:
-            r = self.dst_pos[e]
-            cols[r, slot[r]] = self.src_pos[e]
-            wts[r, slot[r]] = self.inv_outdeg[e]
-            slot[r] += 1
+        cols, wts = self.ell_tables()
         y = ops.spmv(jnp.asarray(cols), jnp.asarray(wts),
                      jnp.asarray(in_values, jnp.float32))
         return np.asarray(y, np.float64)
@@ -82,11 +79,24 @@ def build_partitions(edges: np.ndarray, n_vertices: int, m: int,
 def pagerank(edges: np.ndarray, n_vertices: int, m: int,
              degrees=(4, 2), iters: int = 10, damping: float = 0.85,
              backend: str = "sim", fabric: Fabric = EC2_2013,
-             use_kernel: bool = False, seed: int = 0
+             use_kernel: bool = False, seed: int = 0, mesh=None
              ) -> Tuple[np.ndarray, dict]:
     """Returns (scores [n_vertices], stats).  Unreached vertices keep the
-    teleport mass only."""
+    teleport mass only.
+
+    ``backend="sim"`` (oracle): per-iteration numpy loop through the
+    message-level simulator — float64, runs anywhere.
+    ``backend="device"``: the device-resident iterative engine
+    (``repro.graph.engine``) — all ``iters`` rounds of SpMV + planned
+    reduce fused into ONE jitted dispatch on a mesh of ``m`` devices
+    (``mesh`` or the process defaults); float32, tolerance-bounded against
+    the sim oracle.  ``use_kernel`` selects the ELL Pallas SpMV on both
+    backends; ``stats["engine"]`` carries the dispatch/sync report.
+    """
     parts = build_partitions(edges, n_vertices, m, seed=seed)
+    if backend == "device":
+        return _pagerank_device(parts, n_vertices, degrees, iters, damping,
+                                use_kernel, seed, fabric, mesh)
     ar = SparseAllreduce(m, degrees, backend=backend, fabric=fabric,
                          seed=seed)
     cstats = ar.config([p.out_idx.astype(np.uint32) for p in parts],
@@ -114,6 +124,59 @@ def pagerank(edges: np.ndarray, n_vertices: int, m: int,
         np.add.at(qsum, p.out_idx, q_partial[i])
     scores = (1 - damping) / n_vertices + damping * qsum
     stats = {"config": cstats, "reduce_time_s": reduce_time}
+    return scores, stats
+
+
+def make_pagerank_engine(parts: List[Partition], n_vertices: int,
+                         degrees=(4, 2), damping: float = 0.85,
+                         use_kernel: bool = False, seed: int = 0,
+                         fabric: Fabric = EC2_2013, mesh=None):
+    """Build the device-resident PageRank engine (config once, reuse per
+    ``run``): returns ``(engine, extras, p0)`` — everything
+    ``engine.run(k, p0, extras)`` needs.  Shared by
+    ``pagerank(backend="device")`` and the fig8/fig9 benchmarks."""
+    from . import engine as eng
+    m = len(parts)
+    app = eng.EngineApp(
+        name="pagerank",
+        out_fn=lambda s, e: eng.ell_matvec(e["cols"], e["wts"], s,
+                                           use_kernel=use_kernel),
+        update_fn=lambda s, in_raw, e, ax:
+            (1.0 - damping) / n_vertices + damping * in_raw)
+    engine = eng.GraphEngine(
+        [p.out_idx.astype(np.uint32) for p in parts],
+        [p.in_idx.astype(np.uint32) for p in parts],
+        app, degrees=degrees, mesh=mesh, seed=seed, fabric=fabric)
+    cols, wts = eng.stack_ell([p.ell_tables() for p in parts], engine.u_cap)
+    p0 = np.zeros((m, engine.uin_cap), np.float32)
+    for i, p in enumerate(parts):
+        p0[i, : len(p.in_idx)] = 1.0 / n_vertices
+    return engine, {"cols": cols, "wts": wts}, p0
+
+
+def assemble_pagerank_scores(parts: List[Partition], last_q: np.ndarray,
+                             n_vertices: int, damping: float) -> np.ndarray:
+    """Global scores from the engine's final partial products ``last_q``
+    ``[M, u_cap]`` (teleport added once, same as the sim loop's
+    assembly)."""
+    last_q = np.asarray(last_q, np.float64)
+    qsum = np.zeros(n_vertices)
+    for i, p in enumerate(parts):
+        np.add.at(qsum, p.out_idx, last_q[i, : len(p.out_idx)])
+    return (1 - damping) / n_vertices + damping * qsum
+
+
+def _pagerank_device(parts: List[Partition], n_vertices: int, degrees,
+                     iters: int, damping: float, use_kernel: bool,
+                     seed: int, fabric: Fabric, mesh
+                     ) -> Tuple[np.ndarray, dict]:
+    """Device path: k PageRank rounds in one dispatch (graph engine)."""
+    engine, extras, p0 = make_pagerank_engine(
+        parts, n_vertices, degrees, damping, use_kernel, seed, fabric, mesh)
+    _, last_q, _ = engine.run(iters, p0, extras)
+    scores = assemble_pagerank_scores(parts, last_q, n_vertices, damping)
+    stats = {"config": engine.config_stats, "reduce_time_s": 0.0,
+             "engine": engine.sync_report()}
     return scores, stats
 
 

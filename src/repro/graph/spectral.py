@@ -18,11 +18,19 @@ from .pagerank import build_partitions
 
 def power_iteration(edges: np.ndarray, n_vertices: int, m: int,
                     degrees=(4, 2), iters: int = 30, symmetrize: bool = True,
-                    backend: str = "sim", seed: int = 0
+                    backend: str = "sim", seed: int = 0, mesh=None
                     ) -> Tuple[float, np.ndarray, dict]:
     """Leading eigenvalue/eigenvector of the (symmetrized) adjacency matrix.
 
     Returns (eigenvalue, eigenvector [n], stats).
+
+    ``backend="sim"`` (oracle): per-iteration numpy loop, driver-side
+    Rayleigh normalization in float64.  ``backend="device"``: the graph
+    engine fuses all ``iters`` matvec+reduce+normalize rounds into one
+    jitted dispatch — the normalization runs as an ownership-weighted
+    ``lax.psum`` inside the same shard_map step, so the whole power
+    iteration stays on device; float32, tolerance-bounded vs the oracle;
+    ``stats["engine"]`` carries the dispatch/sync report.
     """
     if symmetrize:
         edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
@@ -30,6 +38,9 @@ def power_iteration(edges: np.ndarray, n_vertices: int, m: int,
     # adjacency matvec (unnormalized): weight 1 per edge
     for p in parts:
         p.inv_outdeg = np.ones_like(p.inv_outdeg)
+    if backend == "device":
+        return _power_iteration_device(parts, n_vertices, degrees, iters,
+                                       seed, mesh)
 
     # one allreduce handles the matvec; scalar reductions ride along on a
     # reserved index (n_vertices) appended to every node's out/in sets.
@@ -72,6 +83,67 @@ def power_iteration(edges: np.ndarray, n_vertices: int, m: int,
         v = q_full / nrm
         p_in = [v[p.in_idx] for p in parts]
     return float(lam), v, {"iters": iters}
+
+
+def _power_iteration_device(parts, n_vertices: int, degrees, iters: int,
+                            seed: int, mesh
+                            ) -> Tuple[float, np.ndarray, dict]:
+    """Device path: matvec + reduce + Rayleigh normalization fused per
+    round.  Each vertex of the in-set union is *owned* by the first node
+    requesting it (host-precomputed 0/1 weights), so the squared-norm
+    ``psum`` counts every vertex exactly once — the on-device analogue of
+    the sim's driver-side dedup."""
+    from . import engine as eng
+    m = len(parts)
+
+    def out_fn(s, e):
+        return eng.ell_matvec(e["cols"], e["wts"], s["v"])
+
+    def update_fn(s, in_raw, e, ax):
+        import jax.numpy as jnp
+        from jax import lax
+        part = jnp.sum(e["norm_w"] * in_raw * in_raw)
+        nrm = jnp.sqrt(lax.psum(part, ax))
+        ok = nrm > 0
+        v2 = jnp.where(ok, in_raw / jnp.maximum(nrm, 1e-30), s["v"])
+        lam = jnp.where(ok, nrm, s["lam"][0]) * jnp.ones_like(s["lam"])
+        return {"v": v2, "lam": lam}
+
+    app = eng.EngineApp(name="spectral", out_fn=out_fn, update_fn=update_fn)
+    engine = eng.GraphEngine(
+        [p.out_idx.astype(np.uint32) for p in parts],
+        [p.in_idx.astype(np.uint32) for p in parts],
+        app, degrees=degrees, mesh=mesh, seed=seed)
+    cols, wts = eng.stack_ell([p.ell_tables() for p in parts], engine.u_cap)
+
+    # ownership: vertex counted at the first node (in index order) whose
+    # in-set requests it — mirrors the sim's first-writer-wins assembly
+    norm_w = np.zeros((m, engine.uin_cap), np.float32)
+    seen = np.zeros(n_vertices, bool)
+    for i, p in enumerate(parts):
+        own = ~seen[p.in_idx]
+        norm_w[i, : len(p.in_idx)] = own
+        seen[p.in_idx] = True
+
+    rng = np.random.RandomState(seed)
+    v = rng.randn(n_vertices)
+    v /= np.linalg.norm(v)
+    v0 = np.zeros((m, engine.uin_cap), np.float32)
+    for i, p in enumerate(parts):
+        v0[i, : len(p.in_idx)] = v[p.in_idx]
+    state0 = {"v": v0, "lam": np.zeros((m, 1), np.float32)}
+    final, _, _ = engine.run(iters, state0,
+                             {"cols": cols, "wts": wts, "norm_w": norm_w})
+    v_dev = np.asarray(final["v"], np.float64)
+    lam = float(np.asarray(final["lam"])[0, 0])
+
+    v_full = np.zeros(n_vertices)
+    seen[:] = False
+    for i, p in enumerate(parts):
+        own = ~seen[p.in_idx]
+        v_full[p.in_idx[own]] = v_dev[i, : len(p.in_idx)][own]
+        seen[p.in_idx] = True
+    return lam, v_full, {"iters": iters, "engine": engine.sync_report()}
 
 
 def power_iteration_reference(edges: np.ndarray, n_vertices: int,

@@ -7,6 +7,11 @@ Builds a mesh over the available devices (data x model), streams synthetic
 Zipf batches (repro.data), runs the shard_map train step with the selected
 gradient-sync mode (ring | hier | sparse — the paper's primitive), logs
 loss/throughput, and checkpoints.
+
+For the paper's *iterative graph* workloads (PageRank / HADI / spectral)
+the entry point is the device-resident engine instead:
+``repro.graph.engine`` (used by ``repro.graph.pagerank`` et al. with
+``backend="device"``) fuses k SpMV+reduce rounds into one dispatch.
 """
 from __future__ import annotations
 
@@ -35,10 +40,12 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--sync", default="ring", choices=["ring", "hier", "sparse"])
-    ap.add_argument("--dp-degrees", default="",
+    ap.add_argument("--dp-degrees", default="auto",
                     help="butterfly degree sequence for the data axis, e.g. "
-                         "'4,4' (default: single round-robin stage; tune "
-                         "with repro.core.tune)")
+                         "'4,4'; 'auto' (default) runs the paper's topology "
+                         "tuner (repro.core.topology.tune) against the TPU "
+                         "fabrics per axis; 'rr' keeps one round-robin "
+                         "(degree = axis size) stage per axis")
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--merge", default="sort",
                     choices=["sort", "fused", "banded"],
@@ -82,8 +89,11 @@ def main(argv=None):
     print(f"mesh data={dsize} model={args.model_axis}; arch={cfg.name} "
           f"({cfg.param_count()/1e6:.1f}M params) sync={args.sync}{repl}")
 
-    dp_degrees = None
-    if args.dp_degrees:
+    if args.dp_degrees in ("rr", ""):
+        dp_degrees = None                      # round-robin per axis
+    elif args.dp_degrees == "auto":
+        dp_degrees = "auto"
+    else:
         degs = tuple(int(x) for x in args.dp_degrees.split(","))
         dp_degrees = {"data": degs}
     step, _ = make_train_step(cfg, mesh, sync=args.sync,

@@ -73,25 +73,36 @@ def mesh_ctx(mesh: Mesh) -> MeshCtx:
     return MeshCtx(mesh=mesh, tp_axis="model", dp_axes=dp)
 
 
+def tuned_dp_degrees(mc: MeshCtx, in_capacity: int, out_capacity: int
+                     ) -> Dict[str, Tuple[int, ...]]:
+    """Per-axis degree sequences from the paper's topology tuner against
+    the TPU fabrics (``pod`` axis -> DCN, others -> ICI).  An EC2-tuned
+    16x4 is NOT optimal on a ~1 us-alpha fabric — see EXPERIMENTS H1
+    iterations 4-5.  This is what ``dp_degrees="auto"`` resolves to, for
+    both the hierarchical-dense and sparse sync plans."""
+    from repro.core.netmodel import TPU_DCN, TPU_ICI
+    from repro.core.topology import tune
+    degrees = {}
+    for a in mc.dp_axes:
+        s = mc.mesh.shape[a]
+        fabric = TPU_DCN if a == "pod" else TPU_ICI
+        plan = tune(s, n0=max(in_capacity, 1),
+                    total_range=max(out_capacity, 2) * 4,
+                    fabric=fabric, serial_nic=False)
+        degrees[a] = plan.degrees
+    return degrees
+
+
 def default_dp_plan(mc: MeshCtx, in_capacity: int, out_capacity: int,
                     degrees=None) -> DevicePlan:
     """Butterfly plan over the data axes (pod stage first — slowest link
     gets the outermost layer, per the paper's degree-ordering argument).
 
-    degrees="auto" runs the paper's topology tuner against the TPU fabrics
-    per axis (an EC2-tuned 16x4 is NOT optimal on a ~1 us-alpha fabric —
-    see EXPERIMENTS H1 iterations 4-5)."""
+    degrees="auto" runs :func:`tuned_dp_degrees`; ``None`` keeps one
+    round-robin stage per axis."""
     axes = [(a, mc.mesh.shape[a]) for a in mc.dp_axes]
     if degrees == "auto":
-        from repro.core.netmodel import TPU_DCN, TPU_ICI
-        from repro.core.topology import tune
-        degrees = {}
-        for a, s in axes:
-            fabric = TPU_DCN if a == "pod" else TPU_ICI
-            plan = tune(s, n0=max(in_capacity, 1),
-                        total_range=max(out_capacity, 2) * 4,
-                        fabric=fabric, serial_nic=False)
-            degrees[a] = plan.degrees
+        degrees = tuned_dp_degrees(mc, in_capacity, out_capacity)
     elif degrees is None:
         degrees = {a: (s,) for a, s in axes}   # round-robin per axis
     return make_device_plan(axes, degrees, in_capacity=in_capacity,
@@ -274,7 +285,7 @@ def init_cache_global(cfg: ModelConfig, mc: MeshCtx, b: int, max_seq: int,
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     opt: Optional[AdamW] = None,
-                    dp_degrees: Optional[Dict[str, Tuple[int, ...]]] = None,
+                    dp_degrees=None,
                     aux_weight: float = 0.01, donate: bool = True,
                     microbatch: int = 1,
                     sparse_tokens_hint: Optional[int] = None,
@@ -285,6 +296,11 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
 
     step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
     batch dict: tokens, labels [+ img_embeds / enc_frames].
+
+    ``dp_degrees``: per-data-axis butterfly degree dict for the hier /
+    sparse sync plans, the string ``"auto"`` to run the paper's topology
+    tuner per axis (:func:`tuned_dp_degrees`), or ``None`` for one
+    round-robin stage per axis.
 
     ``sync_merge`` ("sort" | "fused" | "banded") selects the
     per-butterfly-layer merge of the sparse embedding-grad allreduce
@@ -341,9 +357,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
         cin = int(min(v_l, sparse_tokens_hint or (1 << 16)))
         cin = (cin + 7) // 8 * 8
         cout = (min(v_l, cin * mc.dp) + 7) // 8 * 8
+        sp_degrees = dp_degrees
+        if dp_degrees == "auto":
+            sp_degrees = tuned_dp_degrees(mc, cin, cout)
         sparse_plan = make_device_plan(
             [(a, mesh.shape[a]) for a in mc.dp_axes],
-            dp_degrees or {a: (mesh.shape[a],) for a in mc.dp_axes},
+            sp_degrees or {a: (mesh.shape[a],) for a in mc.dp_axes},
             in_capacity=cin, out_capacity=cout)
         sparse_edges = [jnp.asarray(e) for e in sparse_plan.edges_arrays()]
 
