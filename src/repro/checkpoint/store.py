@@ -36,6 +36,25 @@ def save(path: str, tree: Any, meta: Dict[str, Any] | None = None) -> None:
             json.dump(meta, f, indent=2, default=str)
 
 
+def load_flat(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any] | None]:
+    """Load a :func:`save` artifact without a ``like`` template.
+
+    Returns ``(arrays, meta)`` — the flat ``name -> ndarray`` mapping from
+    the ``.npz`` plus the sidecar ``.meta.json`` dict (``None`` when no
+    meta was written).  This is the read path for consumers whose payload
+    *is* a flat namespace (e.g. the autotuner's plan cache,
+    ``repro.core.autotune``) rather than a pytree with a known template.
+    """
+    base = path[: -len(".npz")] if path.endswith(".npz") else path
+    with np.load(base + ".npz") as data:
+        arrays = {k: data[k] for k in data.files}
+    meta = None
+    if os.path.exists(base + ".meta.json"):
+        with open(base + ".meta.json") as f:
+            meta = json.load(f)
+    return arrays, meta
+
+
 def load(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (shape/dtype checked)."""
     data = np.load(path if path.endswith(".npz") else path + ".npz")

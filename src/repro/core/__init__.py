@@ -15,5 +15,8 @@ from .simulator import ReduceStats, SimSparseAllreduce, dense_oracle
 from .sparse_vec import (SENTINEL, HashPerm, SparseChunk, bucket_partition,
                          merge_add, merge_add_np, segment_compact, sort_chunk,
                          sort_coalesce_np, tree_sum, tree_sum_np)
-from .topology import (ButterflyPlan, binary_plan, ordered_factorizations,
-                       roundrobin_plan, tune)
+from .topology import (ButterflyPlan, binary_plan, num_prime_factors,
+                       ordered_factorizations, roundrobin_plan, tune)
+from .autotune import (PlanCache, StageSample, TuneReport, calibrate_fabric,
+                       calibrated_fabric, default_cache, fit_fabric,
+                       measure_stage_samples, resolve_degrees, select_plan)

@@ -78,6 +78,7 @@ class DevicePlan:
 
     @property
     def num_nodes(self) -> int:
+        """Physical node count (= prod of the bound mesh-axis sizes)."""
         return self.logical.num_nodes
 
     @property

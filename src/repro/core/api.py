@@ -20,6 +20,15 @@ least one alive member, raising ``DeadLogicalNode`` otherwise.  Failure
 schedules for tests/benches live in ``repro.core.faults``; cost and
 completion-probability curves in ``benchmarks/bench_fault_tolerance.py``.
 
+``degrees="auto"`` resolves through the calibrated autotuner
+(:mod:`repro.core.autotune`): cached plans are read from the persistent
+plan cache (``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/plans``) before the
+cost-model sweep runs, and on the device backend :meth:`config` both
+memoizes the frozen plan in-process (a repeat config with the same index
+pattern reuses the compiled reduce with **zero retraces**) and persists
+the frozen routing tensors so a restarted process skips host re-planning.
+See TUNING.md for the workflow, keying and invalidation rules.
+
 The gather-all (union) device primitive used by the training framework is
 exposed separately in :mod:`repro.core.allreduce`.
 """
@@ -37,13 +46,17 @@ from .topology import ButterflyPlan, tune
 
 
 class SparseAllreduce:
+    """The paper's two-call primitive (module docstring): ``config`` once
+    per index pattern, ``reduce`` every iteration, over a sim or device
+    backend with optional r-way replication and autotuned degrees."""
+
     def __init__(self, num_nodes: int, degrees="auto", *,
                  backend: str = "sim",
                  replication: int = 1, dead: Optional[Set[int]] = None,
                  fabric: Fabric = EC2_2013, seed: int = 0,
                  value_width: int = 1, mesh=None,
                  expected_nnz: float = 1e5, index_range: float = 1e6,
-                 merge: str = "sort"):
+                 merge: str = "sort", plan_cache=True, retune: bool = False):
         """``merge`` ("sort" | "fused" | "banded") picks the
         per-butterfly-layer merge used by the dynamic-index union path
         (:meth:`union_reduce`): concatenate-and-resort, the fused Pallas
@@ -51,17 +64,44 @@ class SparseAllreduce:
         its band-limited variant that exploits stream sortedness to cut
         the per-layer tile work to near-linear.  The planned ``reduce``
         path freezes routing at ``config`` time and has no merge stage, so
-        the knob does not affect it."""
+        the knob does not affect it.
+
+        ``plan_cache`` controls the autotuner's persistent cache
+        (``repro.core.autotune``): ``True`` (default) uses the process
+        cache at ``$REPRO_PLAN_CACHE`` / ``~/.cache/repro/plans``, a
+        ``PlanCache`` instance pins a specific root, ``False`` disables
+        persistence (``degrees="auto"`` still tunes, ``config`` still
+        memoizes in-process).  ``retune=True`` bypasses cached degree
+        reads and overwrites them (the ``--retune`` escape hatch)."""
         from .allreduce import MERGE_MODES
         if merge not in MERGE_MODES:
             raise ValueError(
                 f"merge must be one of {MERGE_MODES}, got {merge!r}")
+        from .autotune import PlanCache, default_cache
+        if plan_cache is True:
+            self.plan_cache = default_cache()
+        elif plan_cache is False or plan_cache is None:
+            self.plan_cache = None
+        elif isinstance(plan_cache, PlanCache):
+            self.plan_cache = plan_cache
+        else:
+            raise ValueError(
+                f"plan_cache must be True, False or a PlanCache (to pin a "
+                f"root, pass PlanCache(root=...)), got {plan_cache!r}")
         self.merge = merge
         self.num_nodes = num_nodes
+        self.degrees_source = "explicit"
         if degrees == "auto":
-            plan = tune(num_nodes, n0=expected_nnz, total_range=index_range,
-                        fabric=fabric)
-            degrees = plan.degrees
+            from .autotune import resolve_degrees
+            if self.plan_cache is not None:
+                degrees, self.degrees_source = resolve_degrees(
+                    num_nodes, n0=expected_nnz, total_range=index_range,
+                    fabric=fabric, merge=merge, replication=replication,
+                    width=value_width, cache=self.plan_cache, retune=retune)
+            else:
+                plan = tune(num_nodes, n0=expected_nnz,
+                            total_range=index_range, fabric=fabric)
+                degrees, self.degrees_source = plan.degrees, "tuned"
         self.plan = ButterflyPlan(num_nodes, tuple(degrees))
         self.backend = backend
         self.perm = HashPerm.make(seed)
@@ -80,6 +120,9 @@ class SparseAllreduce:
         self._staging = None
         self._stage_rows = self._stage_cols = None
         self._first_alive = None
+        # how the last config() was satisfied on the device backend:
+        # None (no config yet / sim) | "fresh" | "memo" | "disk"
+        self.config_cache = None
 
     @property
     def num_physical(self) -> int:
@@ -101,6 +144,16 @@ class SparseAllreduce:
         ``ReduceStats`` from a simulator shadow config on both backends.
         Amortization contract: every subsequent :meth:`reduce` (any number
         of iterations) reuses this plan; re-calling ``config`` re-plans.
+
+        Device configs are additionally cached (``repro.core.autotune``):
+        an identical (mesh, degrees, replication, dead, width, index
+        pattern) config in the same process reuses the frozen plan AND its
+        compiled reduce fn — zero host re-planning, zero retraces
+        (``self.config_cache == "memo"``); across a process restart the
+        frozen routing tensors + modeled stats are reloaded from the
+        persistent plan cache, skipping the host planning pass
+        (``"disk"``).  Set ``plan_cache=False`` at construction to opt
+        out of the disk tier.
         """
         self._in_lens = [len(i) for i in in_indices]
         self._out_lens = [len(o) for o in out_indices]
@@ -118,6 +171,8 @@ class SparseAllreduce:
             # like SimSparseAllreduce (and with r=1, on any failure).
             self._first_alive = first_alive_replicas(m_phys, r, self.dead)
             import jax
+
+            from . import autotune
             from .allreduce import make_device_plan
             from .planned import plan_sparse_allreduce
             mesh = self.mesh
@@ -130,22 +185,60 @@ class SparseAllreduce:
                 mesh = jax.make_mesh((m_phys,), ("nodes",))
             axis = mesh.axis_names[0]
             self._mesh_used = mesh
-            dplan = make_device_plan(
-                [(axis, m_phys)], {axis: self.plan.degrees},
-                in_capacity=max(self._out_lens),
-                out_capacity=sum(self._out_lens), replication=r)
-            self._planned = plan_sparse_allreduce(
-                dplan, out_indices, in_indices, perm=self.perm,
-                width=self.width, dead=self.dead)
-            self._reduce_fn = self._planned.make_reduce_fn(mesh)
-            self._u_cap = self._planned.user_scatter.shape[1]
-            # stats come from a simulator shadow-config (same routing,
-            # r-fold message accounting when replicated)
-            shadow = SimSparseAllreduce(self.plan, replication=r,
-                                        dead=self.dead, perm=self.perm,
-                                        fabric=self.fabric,
-                                        value_width=self.width)
-            return shadow.config(out_indices, in_indices)
+            fp = autotune.planned_fingerprint(
+                mesh, self.plan.degrees, r, self.dead, self.width,
+                self.perm, out_indices, in_indices, fabric=self.fabric)
+            memo = autotune.memo_lookup(fp)
+            if memo is not None:
+                # zero-retrace hit: frozen plan AND compiled reduce reused
+                self._planned, self._reduce_fn, stats = memo
+                self._u_cap = self._planned.user_scatter.shape[1]
+                self.config_cache = "memo"
+                return stats
+            planned = stats = None
+            pkey = autotune.planned_cache_key(fp)
+            if self.plan_cache is not None:
+                hit = self.plan_cache.load(pkey)
+                if hit is not None:
+                    meta, arrays = hit
+                    try:
+                        planned = autotune.planned_from_artifact(
+                            arrays, meta, {axis: self.plan.degrees})
+                        stats = autotune.stats_from_meta(meta["stats"])
+                        self.config_cache = "disk"
+                    except Exception:
+                        planned = stats = None   # corrupt entry -> replan
+            if planned is None:
+                dplan = make_device_plan(
+                    [(axis, m_phys)], {axis: self.plan.degrees},
+                    in_capacity=max(self._out_lens),
+                    out_capacity=sum(self._out_lens), replication=r)
+                planned = plan_sparse_allreduce(
+                    dplan, out_indices, in_indices, perm=self.perm,
+                    width=self.width, dead=self.dead)
+                # stats come from a simulator shadow-config (same routing,
+                # r-fold message accounting when replicated)
+                shadow = SimSparseAllreduce(self.plan, replication=r,
+                                            dead=self.dead, perm=self.perm,
+                                            fabric=self.fabric,
+                                            value_width=self.width)
+                stats = shadow.config(out_indices, in_indices)
+                self.config_cache = "fresh"
+                if self.plan_cache is not None:
+                    arrays, meta = autotune.planned_to_artifact(planned)
+                    meta["stats"] = autotune.stats_to_meta(stats)
+                    meta["staging"] = {
+                        "u_cap": planned.u_cap, "uin_cap": planned.uin_cap,
+                        "out_lens": list(self._out_lens),
+                        "in_lens": list(self._in_lens),
+                        "num_physical": m_phys,
+                        "degrees": list(self.plan.degrees)}
+                    self.plan_cache.store(pkey, meta, arrays)
+            self._planned = planned
+            self._reduce_fn = planned.make_reduce_fn(mesh)
+            self._u_cap = planned.user_scatter.shape[1]
+            autotune.memo_store(fp, (planned, self._reduce_fn, stats))
+            return stats
         raise ValueError(f"unknown backend {self.backend!r}")
 
     # ------------------------------------------------------------------

@@ -1,11 +1,22 @@
-"""alpha-beta-floor network cost model.
+"""alpha-beta-floor(-gamma) network cost model.
 
 The paper's central empirical fact (Fig 3): messages below an *effective
 packet floor* (2-4 MB on 10 Gb/s EC2 with Java sockets) are latency-bound,
 so per-node time grows with cluster size in a round-robin exchange.  The
-model here is the classic alpha-beta model with an explicit floor:
+model here is the classic alpha-beta model with an explicit floor plus a
+per-fanout congestion term:
 
-    t(msg bytes s) = alpha + max(s, floor_bytes) / beta
+    t(msg bytes s, fanout f) = alpha + gamma * (f - 1) + max(s, floor) / beta
+
+``gamma`` prices *concurrent-peer congestion*: when a node exchanges with
+f peers in one butterfly stage, every message contends with the f-1 other
+streams for the NIC / switch port (per-message CPU, queueing, incast).
+It is what makes the degree-vs-depth tradeoff expressible — a single
+degree-M round-robin stage pays O(M^2) congestion while a deep low-degree
+butterfly pays almost none — and it is fit from measured stage timings by
+``repro.core.autotune`` rather than guessed (the nominal fabrics below
+ship with gamma = 0, preserving the paper's original alpha-beta-floor
+numbers).
 
 We parameterize it for three fabrics:
 
@@ -26,30 +37,61 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class Fabric:
+    """One interconnect's fitted (or nominal) cost-model parameters.
+
+    Units and defaults:
+
+    * ``beta_bytes_per_s`` — achieved point-to-point bandwidth per node
+      (serial NIC) or per link (torus), in bytes/second.  *Achieved*, not
+      rated: the paper's whole point is that the two differ by 5x.
+    * ``alpha_s`` — per-message setup latency in seconds (socket/DMA setup,
+      per-message CPU; the EC2 fabric folds the paper's packet-floor CPU
+      cost in here).
+    * ``floor_bytes`` — effective packet floor in bytes: payloads below it
+      cost the same as ``floor_bytes`` (default 0 = pure alpha-beta).
+    * ``gamma_s`` — congestion seconds added to *each* message per extra
+      concurrent peer in the same stage (default 0 = classic model; fitted
+      from measurement by ``repro.core.autotune.fit_fabric``).
+    """
     name: str
     beta_bytes_per_s: float      # achieved bandwidth per node (or per link)
     alpha_s: float               # per-message setup latency
     floor_bytes: float = 0.0     # below this, transmission cost is flat
+    gamma_s: float = 0.0         # per-message congestion per extra peer
 
-    def msg_time(self, nbytes: float) -> float:
+    def msg_time(self, nbytes: float, fanout: int = 1) -> float:
+        """Seconds to send one ``nbytes`` message while exchanging with
+        ``fanout`` peers total (the fanout-1 others contribute congestion)."""
         payload = max(float(nbytes), self.floor_bytes)
-        return self.alpha_s + payload / self.beta_bytes_per_s
+        congest = self.gamma_s * max(fanout - 1, 0)
+        return self.alpha_s + congest + payload / self.beta_bytes_per_s
 
     def stage_time(self, nbytes_per_dest: float, fanout: int,
                    serial: bool = True) -> float:
         """Time for one node to exchange with ``fanout`` peers.
 
         serial=True models a single NIC (paper's EC2 nodes): messages
-        serialize on the interface.  serial=False models a torus with
-        independent links per neighbour (TPU ICI) where transfers overlap
-        and only the per-message alphas pipeline.
+        serialize on the interface, so the stage costs ``fanout`` full
+        message times (each inflated by the congestion term).
+        serial=False models a torus with independent links per neighbour
+        (TPU ICI) where transfers overlap and only the per-message alphas
+        pipeline.
         """
         if fanout <= 0:
             return 0.0
-        t_one = self.msg_time(nbytes_per_dest)
+        t_one = self.msg_time(nbytes_per_dest, fanout)
         if serial:
             return fanout * t_one
         return t_one + (fanout - 1) * self.alpha_s
+
+    def as_meta(self) -> dict:
+        """JSON-able parameter dict (plan-cache / calibration persistence;
+        inverse is :func:`repro.core.autotune.fabric_from_meta`)."""
+        return {"name": self.name,
+                "beta_bytes_per_s": self.beta_bytes_per_s,
+                "alpha_s": self.alpha_s,
+                "floor_bytes": self.floor_bytes,
+                "gamma_s": self.gamma_s}
 
 
 # Paper testbed: cc1.4xlarge, 10 Gb/s Ethernet, Java sockets achieve ~2 Gb/s

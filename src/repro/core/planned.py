@@ -90,6 +90,11 @@ class PlannedSparseAllreduce:
     # (1.0 on each logical shard's first alive replica, 0.0 elsewhere),
     # applied to the values inside shard_map.  None when not replicated.
     weights: Optional[np.ndarray] = None
+    # Trace-count regression hook: ``reduce_on_device`` runs only while a
+    # surrounding program is being traced, so this counts (re)traces of the
+    # reduce body.  The autotuner's plan memo (``repro.core.autotune``)
+    # asserts it stays flat across plan-cache hits.
+    trace_count: int = dataclasses.field(default=0, compare=False)
 
     # ---------------------------------------------------------------------
     @property
@@ -126,6 +131,8 @@ class PlannedSparseAllreduce:
         return args
 
     def arg_specs(self):
+        """PartitionSpecs matching :meth:`device_args`, sharded over the
+        plan axes (pass through your own shard_map's in_specs)."""
         from jax.sharding import PartitionSpec as P
         axes = tuple(n for n, _ in self.dplan.axes)
         n = len(self.device_args())
@@ -138,6 +145,7 @@ class PlannedSparseAllreduce:
         ``routing`` tensors arrive sharded with a leading per-device dim of
         size 1 on each plan axis; we squeeze them here.
         """
+        self.trace_count += 1
         nax = len(self.dplan.axes)
 
         def sq(a):

@@ -34,6 +34,7 @@ BYTES_VAL = 4
 
 @dataclasses.dataclass
 class StageStats:
+    """Modeled per-layer message accounting for one reduce phase."""
     layer: int
     phase: str                 # "down" | "up"
     max_msg_bytes: float = 0.0
@@ -44,6 +45,7 @@ class StageStats:
 
 @dataclasses.dataclass
 class ReduceStats:
+    """Aggregated modeled cost of one config or reduce (all stages)."""
     config_time_s: float = 0.0
     reduce_time_s: float = 0.0
     stages: List[StageStats] = dataclasses.field(default_factory=list)
@@ -51,6 +53,7 @@ class ReduceStats:
 
     @property
     def total_bytes(self):
+        """Sum of modeled bytes moved across every stage."""
         return sum(s.total_bytes for s in self.stages)
 
 
@@ -97,11 +100,14 @@ class SimSparseAllreduce:
         return any((logical + j * self.m) not in self.dead for j in range(self.r))
 
     def replica_ids(self, logical: int) -> List[int]:
+        """Physical node ids hosting ``logical`` (paper §V layout)."""
         return [logical + j * self.m for j in range(self.r)]
 
     # -- config (paper §IV-A: index routing, computed once) -------------------
     def config(self, out_indices: Sequence[np.ndarray],
                in_indices: Sequence[np.ndarray]) -> ReduceStats:
+        """The paper's ``config``: freeze all message routing (host numpy)
+        for one index pattern and return its modeled :class:`ReduceStats`."""
         assert len(out_indices) == len(in_indices) == self.m
         plan, m = self.plan, self.m
         stats = ReduceStats()
@@ -245,6 +251,8 @@ class SimSparseAllreduce:
 
     # -- reduce (values only; indices hard-coded in maps, paper §IV-A) --------
     def reduce(self, out_values: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """The paper's ``reduce``: run the frozen schedule on new values,
+        returning each node's requested rows (message-level reference)."""
         assert self._configured, "call config() first"
         plan, m, w = self.plan, self.m, self.w
         stats = ReduceStats()

@@ -59,6 +59,7 @@ class HashPerm:
 
     @staticmethod
     def make(seed: int) -> "HashPerm":
+        """Seeded random permutation (odd multiplier mixed with Knuth's)."""
         rng = np.random.RandomState(seed)
         m = int(rng.randint(0, 1 << 31)) * 2 + 1  # odd
         m = (m * int(_KNUTH)) % (1 << 32)
@@ -69,21 +70,25 @@ class HashPerm:
 
     # -- numpy ---------------------------------------------------------------
     def fwd_np(self, idx: np.ndarray) -> np.ndarray:
+        """Hash uint32 indices into the permuted space (host numpy)."""
         i = idx.astype(np.uint64)
         out = ((i ^ np.uint64(self.xor)) * np.uint64(self.mult)) % (1 << 32)
         return out.astype(np.uint32)
 
     def inv_np(self, h: np.ndarray) -> np.ndarray:
+        """Invert :meth:`fwd_np` (host numpy)."""
         minv = np.uint64(_egcd_inv_u32(self.mult))
         i = (h.astype(np.uint64) * minv) % (1 << 32)
         return (i.astype(np.uint32) ^ np.uint32(self.xor))
 
     # -- jax -----------------------------------------------------------------
     def fwd(self, idx: jax.Array) -> jax.Array:
+        """Hash uint32 indices into the permuted space (traced)."""
         i = idx.astype(jnp.uint32)
         return (i ^ jnp.uint32(self.xor)) * jnp.uint32(self.mult)
 
     def inv(self, h: jax.Array) -> jax.Array:
+        """Invert :meth:`fwd` (traced)."""
         minv = jnp.uint32(_egcd_inv_u32(self.mult))
         return (h.astype(jnp.uint32) * minv) ^ jnp.uint32(self.xor)
 
@@ -155,25 +160,31 @@ class SparseChunk:
 
     # pytree plumbing ---------------------------------------------------------
     def tree_flatten(self):
+        """jax pytree protocol: (children, aux) = ((idx, val), None)."""
         return (self.idx, self.val), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """jax pytree protocol inverse of :meth:`tree_flatten`."""
         return cls(*children)
 
     # ------------------------------------------------------------------------
     @property
     def capacity(self) -> int:
+        """Static slot count C (valid entries + SENTINEL padding)."""
         return self.idx.shape[0]
 
     @property
     def width(self) -> int:
+        """Trailing value width W (1 for scalar-per-index chunks)."""
         return 1 if self.val.ndim == 1 else self.val.shape[1]
 
     def valid_mask(self) -> jax.Array:
+        """bool[C]: True on non-padding slots."""
         return self.idx != jnp.uint32(SENTINEL)
 
     def count(self) -> jax.Array:
+        """Number of valid (non-SENTINEL) entries, as a traced scalar."""
         return jnp.sum(self.valid_mask().astype(jnp.int32))
 
     @staticmethod
@@ -192,6 +203,7 @@ class SparseChunk:
         return SparseChunk(idx=idx, val=val)
 
     def to_dense(self, size: int) -> jax.Array:
+        """Scatter-add the valid entries into a dense [size(,W)] array."""
         shape = (size,) if self.val.ndim == 1 else (size, self.val.shape[1])
         out = jnp.zeros(shape, self.val.dtype)
         safe = jnp.where(self.valid_mask(), self.idx, 0).astype(jnp.int32)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import lru_cache
 from typing import List, Optional, Sequence, Tuple
 
@@ -53,6 +54,7 @@ class ButterflyPlan:
     # -- mixed-radix structure -------------------------------------------------
     @property
     def depth(self) -> int:
+        """Number of butterfly layers D (= len(degrees))."""
         return len(self.degrees)
 
     def strides(self) -> List[int]:
@@ -64,6 +66,7 @@ class ButterflyPlan:
         return list(reversed(out))
 
     def digits(self, node: int) -> List[int]:
+        """Mixed-radix digits of ``node``, one per layer (digit 1 first)."""
         out = []
         for k, s in zip(self.degrees, self.strides()):
             out.append((node // s) % k)
@@ -171,7 +174,16 @@ class ButterflyPlan:
 
 @lru_cache(maxsize=None)
 def ordered_factorizations(m: int, max_depth: int = 6) -> Tuple[Tuple[int, ...], ...]:
-    """All ordered factorizations of m into factors >= 2 (depth-limited)."""
+    """All ordered factorizations of m into factors >= 2, depth-limited.
+
+    ``max_depth`` caps the sequence length to bound the sweep (the count of
+    ordered factorizations grows super-polynomially).  The cap silently
+    *excludes* factorizations needing more than ``max_depth`` factors —
+    e.g. the full binary butterfly of ``m = 2**7`` at the default cap of 6.
+    :func:`tune` detects that case (``Omega(m) > max_depth``, with Omega
+    the number of prime factors counted with multiplicity) and re-runs the
+    sweep with the cap lifted to ``Omega(m)`` so no shape is lost.
+    """
     if m == 1:
         return ((),)
     out = []
@@ -190,12 +202,60 @@ def ordered_factorizations(m: int, max_depth: int = 6) -> Tuple[Tuple[int, ...],
     return tuple(out)
 
 
+def num_prime_factors(m: int) -> int:
+    """Omega(m): prime factors counted with multiplicity (= the deepest
+    possible butterfly over m nodes; 0 for m = 1)."""
+    count, d = 0, 2
+    while d * d <= m:
+        while m % d == 0:
+            m //= d
+            count += 1
+        d += 1
+    return count + (1 if m > 1 else 0)
+
+
 def tune(num_nodes: int, n0: float, total_range: float,
          fabric: Fabric = EC2_2013, bytes_per_entry: float = 12.0,
-         serial_nic: bool = True, top: int = 0):
-    """Rank all degree sequences by modeled time; return best (or top-n list)."""
+         serial_nic: bool = True, top: int = 0, max_depth: int = 6):
+    """Rank all degree sequences by modeled time; return best (or top-n list).
+
+    Model assumptions (documented, not measured — for a *calibrated* sweep
+    use :mod:`repro.core.autotune`, which fits ``fabric`` from on-device
+    stage timings and adds cache persistence):
+
+    * payload compression follows :meth:`ButterflyPlan.expected_counts` —
+      i.e. per-node indices are uniform-hashed samples, the Bernoulli-union
+      curve the paper derives for power-law data after hashing (§III-A);
+    * stage cost is ``fabric.stage_time`` (alpha-beta-floor + gamma
+      congestion) with ``serial_nic`` picking NIC serialization vs
+      per-link overlap, and the local k-way merge costs
+      ``entries * log2(k)`` at a fixed ns/entry;
+    * stages are bulk-synchronous: no cross-stage overlap (paper Fig 7's
+      threading gains are *not* modeled here).
+
+    Degenerate sweeps degrade gracefully instead of silently returning the
+    flat plan: if ``num_nodes`` is prime (or 1) the round-robin plan
+    ``(num_nodes,)`` is the *only* factorization, and a ``UserWarning``
+    says so; if ``max_depth`` would truncate the sweep (``Omega(num_nodes)
+    > max_depth``) the cap is lifted to ``Omega`` with a ``UserWarning``
+    so deep low-degree plans still compete.
+    """
+    omega = num_prime_factors(num_nodes)
+    if omega > max_depth:
+        warnings.warn(
+            f"tune(num_nodes={num_nodes}): max_depth={max_depth} would "
+            f"truncate the factorization sweep (deepest butterfly needs "
+            f"{omega} layers); lifting the cap to {omega}", UserWarning,
+            stacklevel=2)
+        max_depth = omega
+    facs = ordered_factorizations(num_nodes, max_depth)
+    if num_nodes > 1 and len(facs) == 1:
+        warnings.warn(
+            f"tune(num_nodes={num_nodes}): prime node count has no "
+            f"nontrivial factorization — falling back to the flat "
+            f"round-robin plan ({num_nodes},)", UserWarning, stacklevel=2)
     scored = []
-    for degs in ordered_factorizations(num_nodes):
+    for degs in facs:
         plan = ButterflyPlan(num_nodes, degs)
         scored.append((plan.modeled_time(n0, total_range, fabric,
                                          bytes_per_entry,
@@ -207,10 +267,13 @@ def tune(num_nodes: int, n0: float, total_range: float,
 
 
 def roundrobin_plan(num_nodes: int) -> ButterflyPlan:
+    """The degree-M single-stage plan (paper §II's round-robin corner)."""
     return ButterflyPlan(num_nodes, (num_nodes,)) if num_nodes > 1 else ButterflyPlan(1, ())
 
 
 def binary_plan(num_nodes: int) -> ButterflyPlan:
+    """The degree-2 full-depth plan (paper §II's binary-butterfly corner);
+    requires a power-of-2 node count."""
     d = int(math.log2(num_nodes))
     if 2 ** d != num_nodes:
         raise ValueError(f"binary butterfly needs power-of-2 nodes, got {num_nodes}")

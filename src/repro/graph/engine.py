@@ -150,17 +150,29 @@ class GraphEngine:
     iterations executed, ``step_traces`` how many times the per-round body
     was traced — after any ``run(k)``, dispatches/traces grow by exactly
     one however large k is (asserted in tests/test_graph_engine.py).
+
+    ``degrees="auto"`` resolves through the calibrated autotuner's
+    persistent plan cache (``repro.core.autotune``, TUNING.md), and the
+    ``config`` underneath is memo/disk-cached: a second engine over the
+    same mesh + index pattern reuses the frozen plan without host
+    re-planning (``report["config_cache"]`` says which tier hit).
+    ``plan_cache`` / ``retune`` forward to ``SparseAllreduce`` — pass
+    ``retune=True`` after recalibrating the fabric, ``plan_cache=False``
+    to opt out of the disk tier.
     """
 
     def __init__(self, out_sets, in_sets, app: EngineApp, *,
                  degrees="auto", mesh=None, seed: int = 0,
-                 fabric: Fabric = EC2_2013):
+                 fabric: Fabric = EC2_2013, plan_cache=True,
+                 retune: bool = False):
         self.app = app
         self.num_nodes = len(out_sets)
         self.ar = SparseAllreduce(self.num_nodes, degrees, backend="device",
                                   mesh=mesh, seed=seed, fabric=fabric,
-                                  value_width=app.value_width)
+                                  value_width=app.value_width,
+                                  plan_cache=plan_cache, retune=retune)
         self.config_stats = self.ar.config(out_sets, in_sets)
+        self.config_cache = self.ar.config_cache
         self.planned, self.mesh = self.ar.planned_parts()
         meta = self.ar.staging_metadata()
         self.u_cap: int = meta["u_cap"]
@@ -180,7 +192,8 @@ class GraphEngine:
         return dict(self.report,
                     butterfly_depth=self.planned.depth,
                     reduce_collectives_per_round=2 * self.planned.depth,
-                    host_roundtrips=self.report["dispatches"])
+                    host_roundtrips=self.report["dispatches"],
+                    config_cache=self.config_cache)
 
     # ---------------------------------------------------------------------
     def _build(self, k: int, collect: str) -> Callable:

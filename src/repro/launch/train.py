@@ -12,6 +12,11 @@ For the paper's *iterative graph* workloads (PageRank / HADI / spectral)
 the entry point is the device-resident engine instead:
 ``repro.graph.engine`` (used by ``repro.graph.pagerank`` et al. with
 ``backend="device"``) fuses k SpMV+reduce rounds into one dispatch.
+
+``--dp-degrees auto`` goes through the calibrated autotuner with its
+persistent plan cache (``repro.core.autotune``; cache at
+``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/plans``, ``--retune`` to force
+a fresh sweep) — the full workflow is documented in TUNING.md.
 """
 from __future__ import annotations
 
@@ -42,10 +47,21 @@ def main(argv=None):
     ap.add_argument("--sync", default="ring", choices=["ring", "hier", "sparse"])
     ap.add_argument("--dp-degrees", default="auto",
                     help="butterfly degree sequence for the data axis, e.g. "
-                         "'4,4'; 'auto' (default) runs the paper's topology "
-                         "tuner (repro.core.topology.tune) against the TPU "
-                         "fabrics per axis; 'rr' keeps one round-robin "
-                         "(degree = axis size) stage per axis")
+                         "'4,4'; 'auto' (default) resolves through the "
+                         "calibrated autotuner (repro.core.autotune, built "
+                         "on repro.core.topology.tune): the fabric is the "
+                         "stored calibration for this backend when one "
+                         "exists (else the nominal TPU fabric per axis) and "
+                         "the chosen degrees are cached persistently in "
+                         "$REPRO_PLAN_CACHE (default ~/.cache/repro/plans), "
+                         "so repeat launches skip the sweep — see TUNING.md; "
+                         "'rr' keeps one round-robin (degree = axis size) "
+                         "stage per axis")
+    ap.add_argument("--retune", action="store_true",
+                    help="bypass the persistent plan cache for this launch: "
+                         "re-run the degree sweep and overwrite the cached "
+                         "plan (use after recalibrating the fabric or "
+                         "changing the workload shape)")
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--merge", default="sort",
                     choices=["sort", "fused", "banded"],
@@ -103,7 +119,8 @@ def main(argv=None):
                               sparse_tokens_hint=max(
                                   8, args.batch * args.seq // dsize),
                               sync_merge=args.merge,
-                              replication=args.replication, dead=dead)
+                              replication=args.replication, dead=dead,
+                              retune=args.retune)
     params = T.init_params(cfg, mc.tp, seed=args.seed)
     opt_state = AdamW().init(params)
     batcher = iter(Batcher(vocab=cfg.vocab, batch=args.batch, seq=args.seq,

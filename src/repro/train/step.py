@@ -73,36 +73,51 @@ def mesh_ctx(mesh: Mesh) -> MeshCtx:
     return MeshCtx(mesh=mesh, tp_axis="model", dp_axes=dp)
 
 
-def tuned_dp_degrees(mc: MeshCtx, in_capacity: int, out_capacity: int
-                     ) -> Dict[str, Tuple[int, ...]]:
-    """Per-axis degree sequences from the paper's topology tuner against
-    the TPU fabrics (``pod`` axis -> DCN, others -> ICI).  An EC2-tuned
-    16x4 is NOT optimal on a ~1 us-alpha fabric — see EXPERIMENTS H1
-    iterations 4-5.  This is what ``dp_degrees="auto"`` resolves to, for
-    both the hierarchical-dense and sparse sync plans."""
+def tuned_dp_degrees(mc: MeshCtx, in_capacity: int, out_capacity: int,
+                     retune: bool = False) -> Dict[str, Tuple[int, ...]]:
+    """Per-axis degree sequences from the *calibrated, cached* autotuner
+    (``repro.core.autotune``; TUNING.md).  An EC2-tuned 16x4 is NOT
+    optimal on a ~1 us-alpha fabric — see EXPERIMENTS H1 iterations 4-5.
+    This is what ``dp_degrees="auto"`` resolves to, for both the
+    hierarchical-dense and sparse sync plans.
+
+    Per axis: the fabric is the persisted calibration for this backend
+    (``autotune.calibrate_fabric(store=True)``) when one exists, else the
+    nominal TPU fabric (``pod`` axis -> DCN, others -> ICI); the degree
+    sweep result is read from / written to the persistent plan cache, so
+    repeat launches skip the sweep entirely.  ``retune=True`` (CLI
+    ``--retune``) bypasses cached reads and overwrites."""
+    import jax
+
+    from repro.core import autotune
     from repro.core.netmodel import TPU_DCN, TPU_ICI
-    from repro.core.topology import tune
+    backend = jax.default_backend()
+    ndev = len(jax.devices())
     degrees = {}
     for a in mc.dp_axes:
         s = mc.mesh.shape[a]
-        fabric = TPU_DCN if a == "pod" else TPU_ICI
-        plan = tune(s, n0=max(in_capacity, 1),
-                    total_range=max(out_capacity, 2) * 4,
-                    fabric=fabric, serial_nic=False)
-        degrees[a] = plan.degrees
+        nominal = TPU_DCN if a == "pod" else TPU_ICI
+        fabric = autotune.calibrated_fabric(
+            backend=backend, num_devices=ndev, default=nominal)
+        degs, _src = autotune.resolve_degrees(
+            s, n0=max(in_capacity, 1), total_range=max(out_capacity, 2) * 4,
+            fabric=fabric, serial_nic=False, mesh_sig=((a, s),),
+            retune=retune)
+        degrees[a] = degs
     return degrees
 
 
 def default_dp_plan(mc: MeshCtx, in_capacity: int, out_capacity: int,
-                    degrees=None) -> DevicePlan:
+                    degrees=None, retune: bool = False) -> DevicePlan:
     """Butterfly plan over the data axes (pod stage first — slowest link
     gets the outermost layer, per the paper's degree-ordering argument).
 
-    degrees="auto" runs :func:`tuned_dp_degrees`; ``None`` keeps one
-    round-robin stage per axis."""
+    degrees="auto" runs :func:`tuned_dp_degrees` (calibrated + cached);
+    ``None`` keeps one round-robin stage per axis."""
     axes = [(a, mc.mesh.shape[a]) for a in mc.dp_axes]
     if degrees == "auto":
-        degrees = tuned_dp_degrees(mc, in_capacity, out_capacity)
+        degrees = tuned_dp_degrees(mc, in_capacity, out_capacity,
+                                   retune=retune)
     elif degrees is None:
         degrees = {a: (s,) for a, s in axes}   # round-robin per axis
     return make_device_plan(axes, degrees, in_capacity=in_capacity,
@@ -291,16 +306,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     sparse_tokens_hint: Optional[int] = None,
                     sync_merge: str = "sort",
                     replication: int = 1,
-                    dead: Optional[set] = None):
+                    dead: Optional[set] = None,
+                    retune: bool = False):
     """Returns (step_fn, specs) — step_fn is jit-compiled with shardings.
 
     step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
     batch dict: tokens, labels [+ img_embeds / enc_frames].
 
     ``dp_degrees``: per-data-axis butterfly degree dict for the hier /
-    sparse sync plans, the string ``"auto"`` to run the paper's topology
-    tuner per axis (:func:`tuned_dp_degrees`), or ``None`` for one
-    round-robin stage per axis.
+    sparse sync plans, the string ``"auto"`` to resolve per axis through
+    the calibrated, plan-cached autotuner (:func:`tuned_dp_degrees`;
+    ``retune=True`` forces a fresh sweep past the cache), or ``None`` for
+    one round-robin stage per axis.
 
     ``sync_merge`` ("sort" | "fused" | "banded") selects the
     per-butterfly-layer merge of the sparse embedding-grad allreduce
@@ -348,7 +365,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     sparse_plan = sparse_edges = None
     hier_plan = None
     if sync in ("hier", "sparse"):
-        hier_plan = default_dp_plan(mc, 8, 8, dp_degrees)
+        hier_plan = default_dp_plan(mc, 8, 8, dp_degrees, retune=retune)
     if sync == "sparse":
         v_l = T.padded_vocab(cfg, mc.tp) // mc.tp
         # in capacity: unique local rows <= min(tokens/device, vocab shard).
@@ -359,7 +376,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
         cout = (min(v_l, cin * mc.dp) + 7) // 8 * 8
         sp_degrees = dp_degrees
         if dp_degrees == "auto":
-            sp_degrees = tuned_dp_degrees(mc, cin, cout)
+            sp_degrees = tuned_dp_degrees(mc, cin, cout, retune=retune)
         sparse_plan = make_device_plan(
             [(a, mesh.shape[a]) for a in mc.dp_axes],
             sp_degrees or {a: (mesh.shape[a],) for a in mc.dp_axes},

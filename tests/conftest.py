@@ -8,8 +8,19 @@ whole suite still collects and runs.
 """
 import os
 import sys
+import tempfile
 
 try:
     import hypothesis  # noqa: F401
 except ImportError:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
+# Isolate the autotuner's persistent plan cache (repro.core.autotune) from
+# the developer's real ~/.cache/repro/plans: device-backed tests write
+# frozen-plan artifacts on every config, and cross-run reuse of those is a
+# behavior under test, not a side effect to leak.  Subprocess tests
+# inherit the env, so the whole suite shares one throwaway root; tests
+# that exercise the cache explicitly pin their own tmp_path over this.
+if "REPRO_PLAN_CACHE" not in os.environ:
+    os.environ["REPRO_PLAN_CACHE"] = tempfile.mkdtemp(
+        prefix="repro-test-plan-cache-")

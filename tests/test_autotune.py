@@ -1,0 +1,416 @@
+"""Calibrated autotuner (repro.core.autotune): fabric fit recovery, plan
+selection structure, persistent plan cache, zero-retrace config hits.
+
+Device-backend pieces run in subprocesses with forced host devices (the
+main pytest process stays single-device, same pattern as
+test_device_allreduce.py); everything else is host numpy.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.autotune import (PlanCache, StageSample, fit_error,
+                                 fit_fabric, plan_cache_key, resolve_degrees,
+                                 select_plan, synth_stage_samples)
+from repro.core.netmodel import EC2_2013, TPU_ICI, Fabric
+from repro.core.topology import (ButterflyPlan, num_prime_factors,
+                                 ordered_factorizations, tune)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return PlanCache(root=str(tmp_path / "plans"))
+
+
+# ---------------------------------------------------------------------------
+# Calibration fit
+# ---------------------------------------------------------------------------
+
+GT = Fabric("gt", beta_bytes_per_s=2e8, alpha_s=5e-3, gamma_s=2e-4)
+
+
+@pytest.mark.parametrize("serial", [True, False])
+def test_fit_recovers_synthetic_fabric(serial):
+    samples = synth_stage_samples(GT, [1e4, 1e5, 1e6, 4e6], [1, 3, 7, 15],
+                                  serial=serial)
+    fit = fit_fabric(samples, serial=serial)
+    assert abs(fit.alpha_s - GT.alpha_s) / GT.alpha_s < 1e-6
+    assert abs(fit.beta_bytes_per_s - GT.beta_bytes_per_s) \
+        / GT.beta_bytes_per_s < 1e-6
+    assert abs(fit.gamma_s - GT.gamma_s) / GT.gamma_s < 1e-6
+    assert fit_error(fit, samples, serial=serial) < 1e-9
+
+
+def test_fit_recovers_zero_congestion():
+    flat = Fabric("flat", beta_bytes_per_s=1e9, alpha_s=1e-3)
+    fit = fit_fabric(synth_stage_samples(flat, [1e4, 1e6], [1, 3, 7]))
+    assert fit.gamma_s < 1e-9 * flat.alpha_s + 1e-12
+    assert abs(fit.alpha_s - flat.alpha_s) / flat.alpha_s < 1e-6
+
+
+def test_fit_with_noise_stays_close():
+    samples = synth_stage_samples(GT, [1e4, 1e5, 1e6, 4e6],
+                                  [1, 3, 7, 15, 31], noise=0.03, seed=3)
+    fit = fit_fabric(samples)
+    assert abs(fit.alpha_s - GT.alpha_s) / GT.alpha_s < 0.25
+    assert abs(fit.beta_bytes_per_s - GT.beta_bytes_per_s) \
+        / GT.beta_bytes_per_s < 0.25
+    # and the fitted model explains the noisy data to ~noise level
+    assert fit_error(fit, samples) < 0.1
+
+
+def test_fit_requires_three_samples():
+    with pytest.raises(ValueError):
+        fit_fabric([StageSample(1e4, 1, 1e-3)])
+
+
+def test_fit_degenerate_sweeps():
+    """Single payload size -> beta unidentifiable (ValueError); single
+    fanout (prime device count) -> alpha/gamma collinear, so gamma is
+    pinned to 0 with a warning instead of an arbitrary lstsq split."""
+    with pytest.raises(ValueError, match="payload"):
+        fit_fabric(synth_stage_samples(GT, [1e5], [1, 3, 7]))
+    one_fanout = synth_stage_samples(GT, [1e4, 1e5, 1e6], [2])
+    with pytest.warns(UserWarning, match="one fanout"):
+        fit = fit_fabric(one_fanout)
+    assert fit.gamma_s == 0.0
+    # alpha absorbs the (unidentifiable) congestion of the lone fanout
+    assert abs(fit.alpha_s - (GT.alpha_s + GT.gamma_s)) \
+        / GT.alpha_s < 1e-6
+    assert abs(fit.beta_bytes_per_s - GT.beta_bytes_per_s) \
+        / GT.beta_bytes_per_s < 1e-6
+
+
+def test_fabric_congestion_term_backward_compatible():
+    """gamma_s=0 reproduces the original alpha-beta-floor stage cost
+    exactly; gamma_s>0 adds a superlinear-in-fanout congestion penalty."""
+    f0 = Fabric("f0", beta_bytes_per_s=1e9, alpha_s=1e-3)
+    for b, k in [(1e3, 1), (1e6, 7), (4e6, 63)]:
+        assert f0.stage_time(b, k) == pytest.approx(
+            k * (f0.alpha_s + b / f0.beta_bytes_per_s))
+    fg = Fabric("fg", beta_bytes_per_s=1e9, alpha_s=1e-3, gamma_s=1e-4)
+    # congestion grows the *per-message* time linearly in extra peers, so
+    # the serial stage cost picks up a quadratic fanout term
+    assert fg.stage_time(1e3, 8) - f0.stage_time(1e3, 8) == \
+        pytest.approx(8 * 7 * fg.gamma_s)
+    assert fg.msg_time(1e3, fanout=4) > fg.msg_time(1e3, fanout=1)
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+def test_select_plan_powerlaw_nonincreasing_degrees():
+    """Paper §IV structure: on the power-law (twitter-scale) sparsity
+    curve the winner is a valid factorization with degree non-increasing
+    in depth, under both the nominal and a calibrated (gamma>0) fabric."""
+    for fabric in (EC2_2013, GT):
+        for m in (16, 64, 256):
+            rep = select_plan(m, 12.1e6, 60e6, fabric)
+            assert math.prod(rep.plan.degrees) == m
+            assert rep.plan.degrees == tuple(
+                sorted(rep.plan.degrees, reverse=True))
+            assert rep.decreasing
+            assert rep.fallback in (None, "depth-extended")
+            assert rep.candidates[0][1] == rep.plan.degrees
+
+
+def test_calibrated_tuned_beats_best_fixed_homogeneous():
+    """Acceptance: on >= 2 mesh shapes the calibrated-tuned heterogeneous
+    degrees beat the best fixed homogeneous-degree plan (k, ..., k) under
+    the calibrated model (bench_autotune reports the same numbers)."""
+    fit = fit_fabric(synth_stage_samples(
+        Fabric("gt-ec2", beta_bytes_per_s=EC2_2013.beta_bytes_per_s,
+               alpha_s=EC2_2013.alpha_s, gamma_s=2e-4),
+        [1e4, 1e5, 1e6, 4e6], [1, 3, 7, 15, 31]))
+    for m in (64, 256):
+        rep = select_plan(m, 12.1e6, 60e6, fit)
+        homog = [d for d in ordered_factorizations(m, num_prime_factors(m))
+                 if len(set(d)) == 1]
+        best_h = min(ButterflyPlan(m, d).modeled_time(12.1e6, 60e6, fit)
+                     for d in homog)
+        assert len(set(rep.plan.degrees)) > 1      # actually heterogeneous
+        assert rep.modeled_s < best_h
+
+
+def test_select_plan_confirm_reranks_by_measurement():
+    """Timed-trial confirmation overrides the model ranking."""
+    rep0 = select_plan(64, 12.1e6, 60e6, top_k=3)
+    target = rep0.candidates[1][1]      # model's second choice
+
+    def confirm(plan):
+        return 0.1 if plan.degrees == target else 1.0
+
+    rep = select_plan(64, 12.1e6, 60e6, top_k=3, confirm=confirm)
+    assert rep.plan.degrees == target
+    assert rep.measured_s is not None and len(rep.measured_s) == 3
+
+
+def test_tune_prime_falls_back_with_warning():
+    with pytest.warns(UserWarning, match="prime"):
+        plan = tune(7, 1e5, 1e6)
+    assert plan.degrees == (7,)
+    with pytest.warns(UserWarning, match="prime"):
+        rep = select_plan(13, 1e5, 1e6)
+    assert rep.fallback == "prime" and rep.plan.degrees == (13,)
+
+
+def test_tune_lifts_truncating_max_depth():
+    """Omega(128)=7 > default cap 6: the sweep is extended (warned), so
+    the full binary butterfly still competes instead of being silently
+    dropped."""
+    assert (2,) * 7 not in ordered_factorizations(128)          # the cap
+    assert (2,) * 7 in ordered_factorizations(128, 7)
+    assert num_prime_factors(128) == 7
+    with pytest.warns(UserWarning, match="truncate"):
+        scored = tune(128, 1e5, 1e6, top=10_000)
+    assert any(p.degrees == (2,) * 7 for _, p in scored)
+
+
+# ---------------------------------------------------------------------------
+# Persistent plan cache
+# ---------------------------------------------------------------------------
+
+def test_resolve_degrees_cache_roundtrip(cache):
+    kw = dict(n0=12.1e6, total_range=60e6, fabric=GT, cache=cache)
+    d1, src1 = resolve_degrees(64, **kw)
+    d2, src2 = resolve_degrees(64, **kw)
+    assert src1 == "tuned" and src2 == "cache" and d1 == d2
+    assert cache.stats["stores"] == 1 and cache.stats["hits"] == 1
+    # the artifact is a checkpoint/store.py entry with inspectable meta
+    key = plan_cache_key(mesh=(("nodes", 64),), nnz=12.1e6,
+                         index_range=60e6, merge="sort", replication=1,
+                         width=1, fabric=GT)
+    with open(cache.path(key) + ".meta.json") as f:
+        meta = json.load(f)
+    assert tuple(meta["degrees"]) == d1
+    assert meta["decreasing"] is True
+    assert meta["key"]["fabric"]["gamma_s"] == GT.gamma_s
+    # retune bypasses the read and overwrites
+    d3, src3 = resolve_degrees(64, retune=True, **kw)
+    assert src3 == "tuned" and d3 == d1
+    assert cache.stats["stores"] == 2
+
+
+def test_cache_key_boundaries(cache):
+    """Every key field is an invalidation boundary; nnz quantizes to
+    half-log2 buckets so ~equal workloads share a plan."""
+    base = dict(mesh=(("nodes", 64),), nnz=1e5, index_range=1e6,
+                merge="sort", replication=1, width=1, fabric=EC2_2013,
+                serial_nic=True)
+    k0 = plan_cache_key(**base)
+    assert plan_cache_key(**{**base, "nnz": 1.05e5}) == k0    # same bucket
+    for change in ({"nnz": 4e5}, {"merge": "banded"}, {"replication": 2},
+                   {"width": 4}, {"fabric": GT}, {"serial_nic": False},
+                   {"mesh": (("data", 64),)}):
+        assert plan_cache_key(**{**base, **change}) != k0
+
+
+def test_resolve_degrees_rejects_bad_mesh_sig(cache):
+    with pytest.raises(ValueError, match="mesh_sig"):
+        resolve_degrees(64, n0=1e5, total_range=1e6,
+                        mesh_sig=(("nodes", 32),), cache=cache)
+
+
+def test_corrupt_cache_entry_degrades_to_retune(cache):
+    kw = dict(n0=1e5, total_range=1e6, cache=cache)
+    d1, _ = resolve_degrees(16, **kw)
+    key = plan_cache_key(mesh=(("nodes", 16),), nnz=1e5, index_range=1e6,
+                         merge="sort", replication=1, width=1,
+                         fabric=EC2_2013)
+    with open(cache.path(key) + ".meta.json", "w") as f:
+        f.write("{ not json")
+    d2, src2 = resolve_degrees(16, **kw)
+    assert d2 == d1 and src2 == "tuned"
+    assert cache.stats["errors"] >= 1
+
+
+def test_fabric_calibration_roundtrip(cache):
+    assert autotune.calibrated_fabric(backend="cpu", num_devices=8,
+                                      cache=cache, default=TPU_ICI) is TPU_ICI
+    autotune.store_calibrated_fabric(GT, backend="cpu", num_devices=8,
+                                     cache=cache, residual=0.02)
+    back = autotune.calibrated_fabric(backend="cpu", num_devices=8,
+                                      cache=cache)
+    assert back == GT
+
+
+def test_planned_artifact_roundtrip():
+    """Frozen routing tensors survive serialize->deserialize byte-exactly
+    (host-side; the device parity across a restart is the subprocess test
+    below)."""
+    from repro.core.allreduce import make_device_plan
+    from repro.core.planned import plan_sparse_allreduce
+    rng = np.random.RandomState(0)
+    m, degrees = 8, (4, 2)
+    outs = [np.unique(rng.choice(4000, 500).astype(np.uint32))
+            for _ in range(m)]
+    ins = [np.unique(rng.choice(4000, 300).astype(np.uint32))
+           for _ in range(m)]
+    dplan = make_device_plan([("nodes", m)], {"nodes": degrees},
+                             in_capacity=max(len(o) for o in outs),
+                             out_capacity=sum(len(o) for o in outs))
+    planned = plan_sparse_allreduce(dplan, outs, ins)
+    arrays, meta = autotune.planned_to_artifact(planned)
+    rebuilt = autotune.planned_from_artifact(arrays, meta,
+                                             {"nodes": degrees})
+    assert rebuilt.sorted_size == planned.sorted_size
+    assert rebuilt.in_user_len == planned.in_user_len
+    assert rebuilt.perm == planned.perm
+    np.testing.assert_array_equal(rebuilt.user_scatter, planned.user_scatter)
+    np.testing.assert_array_equal(rebuilt.user_gather, planned.user_gather)
+    np.testing.assert_array_equal(rebuilt.bottom_hit, planned.bottom_hit)
+    assert len(rebuilt.layers) == len(planned.layers)
+    for a, b in zip(rebuilt.layers, planned.layers):
+        np.testing.assert_array_equal(a.send_gather, b.send_gather)
+        np.testing.assert_array_equal(a.merge_scatter, b.merge_scatter)
+        np.testing.assert_array_equal(a.up_send_gather, b.up_send_gather)
+        np.testing.assert_array_equal(a.up_recv_scatter, b.up_recv_scatter)
+        assert (a.merged_size, a.up_size) == (b.merged_size, b.up_size)
+    assert rebuilt.dplan.stages[0].axis_index_groups == \
+        planned.dplan.stages[0].axis_index_groups
+
+
+def test_plan_memo_is_lru_bounded(monkeypatch):
+    """The in-process frozen-plan memo cannot grow without bound; hits
+    refresh recency."""
+    autotune.clear_plan_memo()
+    monkeypatch.setattr(autotune, "PLANNED_MEMO_MAX", 3)
+    try:
+        for i in range(4):
+            autotune.memo_store(f"fp{i}", (i,))
+        assert autotune.memo_lookup("fp0") is None      # evicted (oldest)
+        assert autotune.memo_lookup("fp1") == (1,)      # refreshed
+        autotune.memo_store("fp4", (4,))                # evicts fp2 now
+        assert autotune.memo_lookup("fp2") is None
+        assert autotune.memo_lookup("fp1") == (1,)
+        assert len(autotune._PLANNED_MEMO) == 3
+    finally:
+        autotune.clear_plan_memo()
+
+
+def test_stats_meta_roundtrip():
+    from repro.core.simulator import ReduceStats, StageStats
+    st = ReduceStats(config_time_s=1.5, reduce_time_s=0.25, overflow=3,
+                     stages=[StageStats(layer=0, phase="down",
+                                        max_msg_bytes=10.0, total_bytes=99.0,
+                                        num_messages=7, time_s=0.5)])
+    back = autotune.stats_from_meta(autotune.stats_to_meta(st))
+    assert back == st and back.total_bytes == st.total_bytes
+
+
+def test_tuned_dp_degrees_uses_cache(tmp_path, monkeypatch):
+    """make_train_step(dp_degrees="auto") resolves through the persistent
+    cache: the second resolution must not re-run the sweep."""
+    import types
+
+    from repro.train.step import tuned_dp_degrees
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "plans"))
+    mc = types.SimpleNamespace(
+        dp_axes=("data",),
+        mesh=types.SimpleNamespace(shape={"data": 8}))
+    d1 = tuned_dp_degrees(mc, 1024, 4096)
+    calls = []
+    real = autotune.select_plan
+    monkeypatch.setattr(autotune, "select_plan",
+                        lambda *a, **k: calls.append(a) or real(*a, **k))
+    d2 = tuned_dp_degrees(mc, 1024, 4096)
+    assert d2 == d1 and not calls          # pure cache hit
+    d3 = tuned_dp_degrees(mc, 1024, 4096, retune=True)
+    assert d3 == d1 and len(calls) == 1    # escape hatch re-tunes
+
+
+# ---------------------------------------------------------------------------
+# Cross-process cache hits + zero-retrace regression (subprocess, devices)
+# ---------------------------------------------------------------------------
+
+def _env(tmp_path, devices=8):
+    return dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        REPRO_PLAN_CACHE=str(tmp_path / "plans"),
+        PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+
+def _run(code, env):
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_resolve_degrees_hits_across_subprocess_restart(tmp_path,
+                                                        monkeypatch):
+    """A plan tuned in another process is a cache hit here: the sweep is
+    not re-run (select_plan is stubbed to explode)."""
+    out = _run(
+        "from repro.core.autotune import resolve_degrees\n"
+        "print(resolve_degrees(64, n0=12.1e6, total_range=60e6))\n",
+        _env(tmp_path, devices=1))
+    assert "tuned" in out
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "plans"))
+    monkeypatch.setattr(
+        autotune, "select_plan",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError("re-tuned")))
+    degrees, src = resolve_degrees(64, n0=12.1e6, total_range=60e6)
+    assert src == "cache" and math.prod(degrees) == 64
+    assert f"{degrees}" in out             # same plan both processes
+
+
+CONFIG_CACHE_CODE = r"""
+import numpy as np
+from repro.core import SparseAllreduce
+from repro.core import autotune
+
+rng = np.random.RandomState(0)
+M = 8
+outs = [np.unique(rng.choice(4000, 400).astype(np.uint32)) for _ in range(M)]
+ins = [np.unique(rng.choice(4000, 250).astype(np.uint32)) for _ in range(M)]
+vals = [rng.rand(len(o)).astype(np.float32) for o in outs]
+
+ar1 = SparseAllreduce(M, (4, 2), backend="device")
+ar1.config(outs, ins)
+r1 = ar1.reduce(vals)
+first_cache, traces = ar1.config_cache, ar1._planned.trace_count
+assert traces >= 1
+
+# in-process re-config: same frozen plan object, same compiled reduce,
+# ZERO additional traces
+ar2 = SparseAllreduce(M, (4, 2), backend="device")
+ar2.config(outs, ins)
+assert ar2.config_cache == "memo", ar2.config_cache
+assert ar2._planned is ar1._planned
+r2 = ar2.reduce(vals)
+assert ar2._planned.trace_count == traces, "cache hit retraced!"
+for a, b in zip(r1, r2):
+    np.testing.assert_array_equal(a, b)
+
+# simulated restart: drop the in-process memo -> the persistent artifact
+# is rebuilt without re-running host planning, results bit-identical
+autotune.clear_plan_memo()
+ar3 = SparseAllreduce(M, (4, 2), backend="device")
+ar3.config(outs, ins)
+assert ar3.config_cache == "disk", ar3.config_cache
+r3 = ar3.reduce(vals)
+for a, b in zip(r1, r3):
+    np.testing.assert_array_equal(a, b)
+print("FIRST=%s RETRACES=%d" % (first_cache, ar2._planned.trace_count))
+"""
+
+
+def test_config_cache_zero_retrace_and_disk_tier(tmp_path):
+    out1 = _run(CONFIG_CACHE_CODE, _env(tmp_path))
+    assert "FIRST=fresh" in out1
+    # process 2 starts cold but finds the persisted plan: its FIRST config
+    # is already a disk hit (cross-restart cache hit), and the memo/disk
+    # assertions inside the script all hold again
+    out2 = _run(CONFIG_CACHE_CODE, _env(tmp_path))
+    assert "FIRST=disk" in out2
