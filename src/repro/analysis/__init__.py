@@ -1,0 +1,36 @@
+"""Static-analysis layer: AST lint rules + jaxpr dispatch auditor.
+
+Two layers statically enforce the stack's performance and correctness
+invariants (ARCHITECTURE.md "Static analysis"):
+
+* **Layer 1 — AST lint** (:mod:`repro.analysis.rules` on the engine in
+  :mod:`repro.analysis.engine`): a rule catalog over ``src/repro/**``
+  source — compat-layering (version-sensitive JAX symbols only via
+  ``repro.compat``), no host syncs / numpy / implicit casts / float64 /
+  device loops / prints inside jit-traced hot regions (inferred by
+  :mod:`repro.analysis.hotpath`), hashable static-argnum hygiene, and
+  public-docstring coverage.  Pure ``ast`` — linting never imports the
+  linted code (or jax).
+* **Layer 2 — jaxpr dispatch auditor** (:mod:`repro.analysis.auditor`):
+  traces the real public entry points (``SparseAllreduce.reduce``,
+  ``GraphEngine`` runs, ``make_train_step``) to jaxprs and verifies the
+  collective count equals the plan depth, k-round engine runs stay one
+  dispatch (all collectives inside a single ``scan``), no callback /
+  transfer primitives on hot paths, and dtype stability across scan
+  carries.
+
+CLI: ``python -m repro.analysis src --strict`` (see README "Static
+checks"); both layers are regression-tested by ``tests/test_analysis.py``
+and timed by ``benchmarks/bench_analysis.py``.
+"""
+from .violations import (AnalysisReport, AuditReport, CheckResult,  # noqa: F401
+                         Severity, Violation)
+from .engine import ModuleContext, Rule, all_rules, lint_paths  # noqa: F401
+from .hotpath import HotRegion, build_hot_map  # noqa: F401
+from . import rules as _rules  # noqa: F401  (registers the catalog)
+
+__all__ = [
+    "AnalysisReport", "AuditReport", "CheckResult", "Severity", "Violation",
+    "ModuleContext", "Rule", "all_rules", "lint_paths",
+    "HotRegion", "build_hot_map",
+]

@@ -1,0 +1,267 @@
+"""Layer 2 — jaxpr dispatch auditor over the real public entry points.
+
+Where the lint layer reads source, this layer reads what JAX will
+actually run: it traces ``SparseAllreduce.reduce_fn``,
+``GraphEngine.run_fn(k)`` and ``make_train_step`` step functions to
+jaxprs (``jax.make_jaxpr`` — tracing only, nothing executes) and asserts
+the invariants the stack's performance story rests on:
+
+* **collectives == plan structure** — one reduce lowers to exactly
+  ``2 * plan.depth`` ``all_to_all`` phases (``depth`` down + ``depth``
+  up; with ``replication=r>1`` the plan prepends a replica-merge stage,
+  already counted in ``planned.depth``).
+* **one dispatch per k-round engine run** — the whole block is a single
+  top-level ``lax.scan`` whose body carries the per-round reduce; zero
+  collectives outside the scan, ``2 * depth`` (+ the app's own declared
+  collectives) per round inside it.
+* **no host leaks on hot paths** — no callback / infeed / transfer
+  primitives anywhere in the traced program.
+* **dtype stability** — scan carries keep their dtypes across rounds
+  (a widening carry re-allocates every round), and no float64 anywhere
+  on device paths.
+
+Every audit returns a machine-readable
+:class:`~repro.analysis.violations.AuditReport`; ``tests/test_analysis.py``
+regression-tests the counts across degree schedules x replication and the
+CLI's ``--audit`` flag runs a self-contained sweep.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from .violations import AuditReport, CheckResult
+
+# Cross-device communication primitives (jaxpr primitive names).
+COLLECTIVE_PRIMS = {
+    "all_to_all", "psum", "psum2", "all_gather", "reduce_scatter",
+    "ppermute", "pmin", "pmax", "allreduce",
+}
+
+# Primitives that must never appear on a hot path: host callbacks stall
+# the device per invocation, infeed/outfeed and device_put are transfers.
+FORBIDDEN_PRIMS = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "infeed", "outfeed", "device_put", "copy_to_host_async",
+}
+
+# Primitives that open a sub-jaxpr we treat as "one dispatch region".
+_SCAN_PRIMS = {"scan"}
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    """Inner jaxprs of one equation (scan/cond/pjit/shard_map/custom_*
+    bodies), wherever they hide in ``eqn.params``."""
+    for v in eqn.params.values():
+        for item in (v if isinstance(v, (list, tuple)) else (v,)):
+            inner = getattr(item, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield inner            # ClosedJaxpr -> jaxpr
+            elif hasattr(item, "eqns"):
+                yield item             # bare jaxpr
+
+
+def iter_eqns(jaxpr, _in_scan: bool = False) -> Iterator[Tuple[Any, bool]]:
+    """Yield ``(eqn, inside_scan)`` for every equation, recursing into
+    all sub-jaxprs.  ``inside_scan`` is True once any enclosing equation
+    is a ``scan`` — the per-round region of an engine dispatch."""
+    for eqn in jaxpr.eqns:
+        yield eqn, _in_scan
+        scoped = _in_scan or eqn.primitive.name in _SCAN_PRIMS
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, scoped)
+
+
+def collective_counts(jaxpr, inside_scan: Optional[bool] = None) -> Counter:
+    """Multiset of collective primitive names in ``jaxpr``; restrict to
+    equations inside/outside scans with ``inside_scan=True/False``."""
+    c: Counter = Counter()
+    for eqn, in_scan in iter_eqns(jaxpr):
+        if inside_scan is not None and in_scan != inside_scan:
+            continue
+        if eqn.primitive.name in COLLECTIVE_PRIMS:
+            c[eqn.primitive.name] += 1
+    return c
+
+
+def _all_avals(jaxpr) -> Iterator[Any]:
+    """Every abstract value in the program: top-level in/out plus each
+    equation's operands and results, recursively."""
+    for v in list(jaxpr.invars) + list(jaxpr.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None:
+            yield aval
+    for eqn, _ in iter_eqns(jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None:
+                yield aval
+
+
+def _f64_avals(jaxpr) -> List[str]:
+    """Names of 64-bit float/complex avals found anywhere (should be
+    empty: device paths are fp32 end-to-end)."""
+    bad = []
+    for aval in _all_avals(jaxpr):
+        dt = str(getattr(aval, "dtype", ""))
+        if dt in ("float64", "complex128"):
+            bad.append(dt)
+    return bad
+
+
+def _scan_carry_mismatches(jaxpr) -> List[str]:
+    """Scan carries whose input dtype != output dtype — each mismatch
+    re-converts (and may re-allocate) the carry every round."""
+    bad = []
+    for eqn, _ in iter_eqns(jaxpr):
+        if eqn.primitive.name not in _SCAN_PRIMS:
+            continue
+        body = eqn.params["jaxpr"].jaxpr
+        nc = eqn.params.get("num_consts", 0)
+        ncar = eqn.params.get("num_carry", 0)
+        ins = body.invars[nc:nc + ncar]
+        outs = body.outvars[:ncar]
+        for i, (a, b) in enumerate(zip(ins, outs)):
+            da = getattr(getattr(a, "aval", None), "dtype", None)
+            db = getattr(getattr(b, "aval", None), "dtype", None)
+            if da is not None and db is not None and da != db:
+                bad.append(f"carry[{i}]: {da} -> {db}")
+    return bad
+
+
+def _forbidden_hits(jaxpr) -> List[str]:
+    """Forbidden primitive names present in the program."""
+    return sorted({eqn.primitive.name for eqn, _ in iter_eqns(jaxpr)
+                   if eqn.primitive.name in FORBIDDEN_PRIMS})
+
+
+def base_checks(jaxpr, prefix: str = "") -> List[CheckResult]:
+    """Invariants every audited entry point must satisfy: no forbidden
+    primitives, no f64, dtype-stable scan carries."""
+    forb = _forbidden_hits(jaxpr)
+    f64 = _f64_avals(jaxpr)
+    carries = _scan_carry_mismatches(jaxpr)
+    return [
+        CheckResult(f"{prefix}no_forbidden_primitives", not forb,
+                    expected=[], actual=forb,
+                    detail="host callbacks / transfers on a hot path"),
+        CheckResult(f"{prefix}no_float64", not f64,
+                    expected=0, actual=len(f64),
+                    detail="device paths are fp32 end-to-end"),
+        CheckResult(f"{prefix}scan_carry_dtypes_stable", not carries,
+                    expected=[], actual=carries,
+                    detail="a widening carry re-converts every round"),
+    ]
+
+
+def trace_jaxpr(fn, *example_args):
+    """``jax.make_jaxpr`` the callable on example args (trace only — no
+    execution, no compile)."""
+    import jax
+    return jax.make_jaxpr(fn)(*example_args).jaxpr
+
+
+# ---------------------------------------------------------------------------
+# entry-point audits
+# ---------------------------------------------------------------------------
+
+def audit_reduce(sa, width: Optional[int] = None) -> AuditReport:
+    """Audit one configured ``SparseAllreduce`` (device backend).
+
+    Traces the public ``sa.reduce_fn`` on a zeros input of the staged
+    shape and checks the collective count equals ``2 * planned.depth``
+    (the butterfly's ``depth`` down + ``depth`` up ``all_to_all`` phases;
+    ``planned.depth`` already includes the replica-merge stage prepended
+    when ``replication=r>1``), plus the :func:`base_checks`.
+    """
+    import jax.numpy as jnp
+    planned, _mesh = sa.planned_parts()
+    meta = sa.staging_metadata()
+    w = width if width is not None else getattr(sa, "width", 1)
+    shape = (meta["num_physical"], meta["u_cap"]) + ((w,) if w > 1 else ())
+    jaxpr = trace_jaxpr(sa.reduce_fn, jnp.zeros(shape, jnp.float32))
+
+    counts = collective_counts(jaxpr)
+    a2a = counts.get("all_to_all", 0)
+    expected = 2 * planned.depth
+    checks = [
+        CheckResult("collectives_equal_plan_depth", a2a == expected,
+                    expected=expected, actual=a2a,
+                    detail=f"depth={planned.depth} (down+up all_to_all); "
+                           f"all collectives: {dict(counts)}"),
+    ]
+    checks += base_checks(jaxpr)
+    return AuditReport(
+        target=f"SparseAllreduce.reduce_fn[depth={planned.depth}, "
+               f"r={getattr(sa, 'replication', 1)}]", checks=checks)
+
+
+def audit_engine(engine, k: int, state, extras=None, *,
+                 collect: str = "last",
+                 extra_collectives_per_round: int = 0) -> AuditReport:
+    """Audit a ``GraphEngine``'s k-round dispatch.
+
+    Traces the public ``engine.run_fn(k, collect)`` on the given example
+    ``state`` / ``extras`` (shapes only matter) and checks the
+    one-dispatch contract: exactly one top-level ``lax.scan``, zero
+    collectives outside it, and ``2 * depth + extra_collectives_per_round``
+    collectives per round inside it (apps whose ``update_fn`` runs its own
+    collective — e.g. a psum normalizer — declare it via
+    ``extra_collectives_per_round``).
+    """
+    import jax.numpy as jnp
+    from jax.tree_util import tree_map
+    fn = engine.run_fn(k, collect)
+    state = tree_map(jnp.asarray, state)
+    extras = tree_map(jnp.asarray, extras if extras is not None else {})
+    jaxpr = trace_jaxpr(fn, state, extras, *engine.routing_args())
+
+    n_scans = sum(1 for eqn, in_scan in iter_eqns(jaxpr)
+                  if eqn.primitive.name in _SCAN_PRIMS and not in_scan)
+    outside = collective_counts(jaxpr, inside_scan=False)
+    inside = collective_counts(jaxpr, inside_scan=True)
+    per_round = sum(inside.values())
+    expected_round = 2 * engine.planned.depth + extra_collectives_per_round
+
+    checks = [
+        CheckResult("one_scan_dispatch", n_scans == 1,
+                    expected=1, actual=n_scans,
+                    detail="k rounds must fuse into a single lax.scan"),
+        CheckResult("no_collectives_outside_scan", sum(outside.values()) == 0,
+                    expected={}, actual=dict(outside),
+                    detail="a collective outside the scan runs once per "
+                           "dispatch instead of per round"),
+        CheckResult("per_round_collectives_equal_plan_depth",
+                    per_round == expected_round,
+                    expected=expected_round, actual=per_round,
+                    detail=f"2*depth={2 * engine.planned.depth} reduce + "
+                           f"{extra_collectives_per_round} app-declared; "
+                           f"inside-scan: {dict(inside)}"),
+    ]
+    checks += base_checks(jaxpr)
+    return AuditReport(
+        target=f"GraphEngine.run_fn[k={k}, collect={collect}, "
+               f"depth={engine.planned.depth}]", checks=checks)
+
+
+def audit_callable(name: str, fn, *example_args,
+                   expected_all_to_all: Optional[int] = None) -> AuditReport:
+    """Audit an arbitrary jit-able entry point (e.g. a ``make_train_step``
+    step function): :func:`base_checks` plus an informational collective
+    census, and — when ``expected_all_to_all`` is given — an exact
+    ``all_to_all`` count check."""
+    jaxpr = trace_jaxpr(fn, *example_args)
+    counts = collective_counts(jaxpr)
+    checks = []
+    if expected_all_to_all is not None:
+        a2a = counts.get("all_to_all", 0)
+        checks.append(CheckResult(
+            "all_to_all_count", a2a == expected_all_to_all,
+            expected=expected_all_to_all, actual=a2a,
+            detail=f"all collectives: {dict(counts)}"))
+    else:
+        checks.append(CheckResult(
+            "collective_census", True, expected=None, actual=dict(counts),
+            detail="informational"))
+    checks += base_checks(jaxpr)
+    return AuditReport(target=name, checks=checks)

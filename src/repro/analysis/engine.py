@@ -1,0 +1,193 @@
+"""Lint rule engine: contexts, the Rule base class, registry and runner.
+
+Rules are classes (one instance per run) with an ``id``, ``severity``,
+``scope`` (fnmatch patterns against the repro-package-relative path) and
+a ``check(ctx)`` generator of :class:`~repro.analysis.violations.Violation`.
+The engine parses each file once into a :class:`ModuleContext` (source +
+AST + lazily-inferred hot regions + ``# noqa`` map) and fans it out to
+every in-scope rule.  Linting never imports the linted code.
+
+Suppression: ``# noqa: RA201`` on the offending line silences that rule
+there (a bare ``# noqa`` silences all rules on the line).  Repo policy
+(ISSUE 6): every suppression carries the rule id so intent is grep-able.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import functools
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Type
+
+from .hotpath import HotRegion, build_hot_map
+from .violations import Severity, Violation
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<ids>[A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*))?",
+                      re.IGNORECASE)
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a rule may inspect about one source file."""
+
+    path: str                       # absolute path on disk
+    display: str                    # path as reported in violations
+    pkg_rel: str                    # path relative to the repro package
+    source: str
+    tree: ast.AST
+
+    @classmethod
+    def from_file(cls, path: str, display: Optional[str] = None
+                  ) -> "ModuleContext":
+        """Parse ``path`` into a context; raises SyntaxError on bad code."""
+        with open(path) as f:
+            source = f.read()
+        ap = os.path.abspath(path)
+        return cls(path=ap, display=display or os.path.relpath(ap),
+                   pkg_rel=package_relpath(ap), source=source,
+                   tree=ast.parse(source, filename=path))
+
+    @functools.cached_property
+    def lines(self) -> List[str]:
+        """Source split into lines (1-based access via ``lines[n-1]``)."""
+        return self.source.splitlines()
+
+    @functools.cached_property
+    def hot_regions(self) -> List[HotRegion]:
+        """Inferred traced regions (see :mod:`repro.analysis.hotpath`)."""
+        return build_hot_map(self.tree, self.source)
+
+    @functools.cached_property
+    def noqa(self) -> Dict[int, Optional[Set[str]]]:
+        """line -> suppressed rule-id set (None = all rules suppressed)."""
+        out: Dict[int, Optional[Set[str]]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _NOQA_RE.search(line)
+            if not m:
+                continue
+            ids = m.group("ids")
+            out[i] = ({s.strip().upper() for s in ids.split(",")}
+                      if ids else None)
+        return out
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        """True when a ``# noqa`` on ``line`` covers ``rule_id``."""
+        if line not in self.noqa:
+            return False
+        ids = self.noqa[line]
+        return ids is None or rule_id in ids
+
+    def iter_hot_nodes(self) -> Iterator[tuple]:
+        """Yield ``(region, node)`` for every AST node in a hot region."""
+        for region in self.hot_regions:
+            for node in region.walk():
+                yield region, node
+
+
+def package_relpath(path: str) -> str:
+    """Path relative to the innermost ``repro`` package dir (so rule
+    scopes read ``core/planned.py``), else the basename."""
+    parts = os.path.abspath(path).split(os.sep)
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            return "/".join(parts[i + 1:])
+    return parts[-1]
+
+
+class Rule:
+    """Base class for one lint rule.
+
+    Subclasses set ``rule_id`` / ``severity`` / ``title`` / ``rationale``
+    and implement :meth:`check`.  ``scope`` / ``exclude`` are fnmatch
+    patterns over the package-relative path (``core/planned.py``).
+    """
+
+    rule_id: str = "RA000"
+    severity: str = Severity.ERROR
+    title: str = ""
+    rationale: str = ""
+    scope: Sequence[str] = ("*",)
+    exclude: Sequence[str] = ()
+
+    def applies_to(self, ctx: ModuleContext) -> bool:
+        """Scope gate: pkg-relative path must match ``scope`` and miss
+        ``exclude``."""
+        rel = ctx.pkg_rel
+        if not any(fnmatch.fnmatch(rel, p) for p in self.scope):
+            return False
+        return not any(fnmatch.fnmatch(rel, p) for p in self.exclude)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Yield violations found in ``ctx`` (override)."""
+        raise NotImplementedError
+
+    def violation(self, ctx: ModuleContext, node: ast.AST, message: str
+                  ) -> Violation:
+        """Build a Violation anchored at ``node``."""
+        return Violation(rule_id=self.rule_id, severity=self.severity,
+                         path=ctx.display,
+                         line=getattr(node, "lineno", 1),
+                         col=getattr(node, "col_offset", 0),
+                         message=message)
+
+
+_REGISTRY: List[Type[Rule]] = []
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator adding a rule to the global catalog (id-unique)."""
+    if any(r.rule_id == cls.rule_id for r in _REGISTRY):
+        raise ValueError(f"duplicate rule id {cls.rule_id}")
+    _REGISTRY.append(cls)
+    return cls
+
+
+def all_rules() -> List[Type[Rule]]:
+    """The registered rule catalog, in registration order."""
+    from . import rules  # noqa: F401  (ensure catalog is registered)
+    return list(_REGISTRY)
+
+
+def discover_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/dirs into a sorted list of ``.py`` files."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for dirpath, dirnames, files in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                out.extend(os.path.join(dirpath, f)
+                           for f in files if f.endswith(".py"))
+        else:
+            raise FileNotFoundError(p)
+    return sorted(set(out))
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Iterable[str]] = None,
+               ) -> tuple:
+    """Run the catalog over ``paths`` (files or directories).
+
+    ``select``: optional rule-id whitelist.  Returns
+    ``(violations, files_checked)`` with violations ordered by
+    (path, line, rule id); ``# noqa``-suppressed findings are dropped.
+    """
+    wanted = {s.upper() for s in select} if select else None
+    rules = [cls() for cls in all_rules()
+             if wanted is None or cls.rule_id in wanted]
+    violations: List[Violation] = []
+    files = discover_files(paths)
+    for path in files:
+        ctx = ModuleContext.from_file(path)
+        for rule in rules:
+            if not rule.applies_to(ctx):
+                continue
+            for v in rule.check(ctx):
+                if not ctx.suppressed(v.rule_id, v.line):
+                    violations.append(v)
+    violations.sort(key=lambda v: (v.path, v.line, v.rule_id))
+    return violations, len(files)

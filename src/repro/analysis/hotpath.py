@@ -1,0 +1,245 @@
+"""Hot-region inference: which functions of a module run under tracing.
+
+A *hot region* is a function whose body executes inside a JAX trace —
+``@jit``-decorated, passed to ``jit`` / ``shard_map`` / ``lax.scan`` /
+``pl.pallas_call`` / ``grad`` / ``cond`` …, registered as an
+``EngineApp`` per-round callback, or (transitively) called from any of
+those within the same module.  Host-sync / numpy / float64 / device-loop
+rules (``repro.analysis.rules``) only fire inside hot regions, so the
+linter stays quiet on legitimately host-side code (simulator oracles,
+``config`` planning, benchmarks).
+
+Inference is purely syntactic (no imports, no jax): seeds are matched on
+the *last attribute component* of the wrapping callee (``jax.jit``,
+``api.jit`` and bare ``jit`` all match), then hotness propagates to
+same-module functions referenced by name from hot bodies, to a fixpoint.
+Over-approximation is deliberate — a false-positive hot region costs a
+reviewable finding (suppressible with ``# noqa: RAxxx``), a false
+negative hides a silent per-round host sync.
+
+Force a function hot with a ``# analysis: hot`` comment on its ``def``
+line when it is only reached through dynamic dispatch the inference
+cannot see.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# Callables whose function-valued arguments are traced.  Matched on the
+# final attribute component: ``jax.jit``, ``lax.scan``, ``pl.pallas_call``
+# and their bare-name imports all resolve to one entry here.
+WRAPPER_NAMES: Set[str] = {
+    "jit", "pjit", "shard_map", "scan", "pallas_call", "fori_loop",
+    "while_loop", "cond", "switch", "grad", "value_and_grad", "vmap",
+    "pmap", "remat", "checkpoint", "custom_vjp", "custom_jvp", "make_jaxpr",
+    "eval_shape",
+}
+
+# Constructor kwargs whose values are per-round traced callbacks — the
+# graph engine's app protocol (repro.graph.engine.EngineApp).
+CALLBACK_KWARGS: Dict[str, Tuple[str, ...]] = {
+    "EngineApp": ("out_fn", "update_fn"),
+}
+
+_FORCE_HOT_RE = re.compile(r"#\s*analysis:\s*hot\b")
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclasses.dataclass(frozen=True)
+class HotRegion:
+    """One top-level hot function: its qualname, AST node and why it is
+    considered hot (seed kind or the propagation chain)."""
+
+    qualname: str
+    node: ast.AST
+    reason: str
+
+    def walk(self) -> Iterator[ast.AST]:
+        """Every AST node inside the region (nested defs included — a
+        closure defined in a traced body is traced when called)."""
+        return ast.walk(self.node)
+
+
+def _last_attr(node: ast.AST) -> Optional[str]:
+    """Final dotted component of a Name/Attribute callee, else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _callable_refs(node: ast.AST) -> List[str]:
+    """Names a function-valued argument might resolve to: a bare Name,
+    the inner function of ``partial(f, ...)``, or attribute tails like
+    ``self.f`` (resolved against same-module defs by final component)."""
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, ast.Attribute):
+        return [node.attr]
+    if isinstance(node, ast.Call):
+        tail = _last_attr(node.func)
+        if tail == "partial" and node.args:
+            return _callable_refs(node.args[0])
+    return []
+
+
+class _Collector(ast.NodeVisitor):
+    """One pass: index every def by name, record seeds and call edges."""
+
+    def __init__(self, source_lines: List[str]):
+        self.lines = source_lines
+        self.defs: Dict[str, List[ast.AST]] = {}     # name -> def nodes
+        self.node_index: Dict[int, ast.AST] = {}     # id -> def/lambda node
+        self.qualname: Dict[int, str] = {}           # id(node) -> qualname
+        self.parents: Dict[int, Optional[ast.AST]] = {}
+        self.seeds: Dict[int, str] = {}              # id(node) -> reason
+        # id(def node) -> names referenced anywhere in its body
+        self.refs: Dict[int, Set[str]] = {}
+        self._stack: List[ast.AST] = []
+        self._qual: List[str] = []
+
+    # -- defs ------------------------------------------------------------
+    def _visit_def(self, node) -> None:
+        name = getattr(node, "name", "<lambda>")
+        self.defs.setdefault(name, []).append(node)
+        self.node_index[id(node)] = node
+        self.qualname[id(node)] = ".".join(self._qual + [name])
+        self.parents[id(node)] = self._stack[-1] if self._stack else None
+        for dec in getattr(node, "decorator_list", []):
+            if self._is_tracing_decorator(dec):
+                self.seeds[id(node)] = "decorated @%s" % ast.unparse(dec)
+        if self._line_forces_hot(node):
+            self.seeds[id(node)] = "forced by '# analysis: hot'"
+        self.refs[id(node)] = set()
+        self._stack.append(node)
+        self._qual.append(name)
+        self.generic_visit(node)
+        self._qual.pop()
+        self._stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_def
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self.parents[id(node)] = self._stack[-1] if self._stack else None
+        self.node_index[id(node)] = node
+        self.qualname[id(node)] = ".".join(self._qual + ["<lambda>"])
+        self.refs[id(node)] = set()
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._qual.append(node.name)
+        self.generic_visit(node)
+        self._qual.pop()
+
+    def _line_forces_hot(self, node) -> bool:
+        line = self.lines[node.lineno - 1] if \
+            0 < node.lineno <= len(self.lines) else ""
+        return bool(_FORCE_HOT_RE.search(line))
+
+    def _is_tracing_decorator(self, dec: ast.AST) -> bool:
+        tail = _last_attr(dec)
+        if tail in WRAPPER_NAMES:
+            return True
+        if isinstance(dec, ast.Call):
+            # @partial(jax.jit, ...) / @jax.jit(static_argnums=...)
+            inner = _last_attr(dec.func)
+            if inner in WRAPPER_NAMES:
+                return True
+            if inner == "partial" and dec.args:
+                return _last_attr(dec.args[0]) in WRAPPER_NAMES
+        return False
+
+    # -- seeds from call sites + reference edges -------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        tail = _last_attr(node.func)
+        if tail in WRAPPER_NAMES:
+            for arg in node.args:
+                if isinstance(arg, ast.Lambda):
+                    self.seeds[id(arg)] = f"lambda passed to {tail}()"
+                for ref in _callable_refs(arg):
+                    # resolved after the walk — defs may appear after use
+                    self._mark_ref_seed(ref, f"passed to {tail}()")
+        for ctor, kwargs in CALLBACK_KWARGS.items():
+            if tail == ctor:
+                for kw in node.keywords:
+                    if kw.arg in kwargs:
+                        for ref in _callable_refs(kw.value):
+                            self._mark_ref_seed(
+                                ref, f"{ctor}({kw.arg}=...) callback")
+        self.generic_visit(node)
+
+    def _mark_ref_seed(self, name: str, reason: str) -> None:
+        self.seed_names = getattr(self, "seed_names", [])
+        self.seed_names.append((name, reason))
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if self._stack:
+            self.refs[id(self._stack[-1])].add(node.id)
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self._stack:
+            self.refs[id(self._stack[-1])].add(node.attr)
+        self.generic_visit(node)
+
+
+def build_hot_map(tree: ast.AST, source: str = "") -> List[HotRegion]:
+    """Infer the hot regions of a module (see module docstring).
+
+    Returns the *maximal* hot functions — nested hot defs inside an
+    already-hot ancestor are folded into the ancestor's region, so every
+    hot AST node is covered exactly once.
+    """
+    lines = source.splitlines()
+    col = _Collector(lines)
+    col.visit(tree)
+
+    hot: Dict[int, str] = dict(col.seeds)
+    node_by_id = col.node_index
+
+    # seeds referenced by name at wrap call sites
+    for name, reason in getattr(col, "seed_names", []):
+        for d in col.defs.get(name, []):
+            hot.setdefault(id(d), reason)
+
+    # propagate: any def whose name is referenced from a hot body is hot
+    changed = True
+    guard = 0
+    while changed and guard < 100:
+        changed, guard = False, guard + 1
+        for nid, reason in list(hot.items()):
+            for ref in col.refs.get(nid, ()):
+                for d in col.defs.get(ref, []):
+                    if id(d) not in hot:
+                        src = col.qualname.get(nid, "?")
+                        hot[id(d)] = f"called from hot {src}"
+                        changed = True
+
+    # nested defs of a hot function are hot by construction; keep maximal
+    # regions only
+    def _covered_by_hot_ancestor(nid: int) -> bool:
+        p = col.parents.get(nid)
+        while p is not None:
+            if id(p) in hot:
+                return True
+            p = col.parents.get(id(p))
+        return False
+
+    regions = []
+    for nid, reason in hot.items():
+        if _covered_by_hot_ancestor(nid):
+            continue
+        node = node_by_id.get(nid)
+        if node is None:
+            continue
+        regions.append(HotRegion(qualname=col.qualname.get(nid, "?"),
+                                 node=node, reason=reason))
+    regions.sort(key=lambda r: r.node.lineno)
+    return regions

@@ -1,0 +1,513 @@
+"""The lint rule catalog — every repo invariant the linter enforces.
+
+Naming: ``RA1xx`` compat layering, ``RA2xx`` hot-region (traced code)
+hazards, ``RA3xx`` jit hygiene, ``RA4xx`` documentation.  Each rule has
+positive + negative fixtures under ``tests/fixtures/analysis/`` (file
+name prefixed with the lower-cased rule id) and is regression-tested by
+``tests/test_analysis.py``; the whole catalog must pass over
+``src/repro`` at HEAD (``python -m repro.analysis src --strict``).
+
+Hot-region rules (RA2xx) only inspect code inferred to run under a JAX
+trace (:mod:`repro.analysis.hotpath`) — a host sync there is paid every
+round and silently erases the paper's nested-stage wins (§III-IV), which
+is exactly why these are linted instead of hoped-for.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional, Set
+
+from .engine import ModuleContext, Rule, register
+from .violations import Severity, Violation
+
+# numpy attributes that are harmless as *references* inside traced code
+# (dtype tags, constants) — only calls moving values are host syncs.
+_NP_MODULES = {"np", "numpy", "onp"}
+_DEVICEISH_RE = re.compile(
+    r"num_nodes|num_devices|num_physical|m_phys|\bdevices\b|mesh\.shape"
+    r"|mesh\.size|axis_size|local_device_count|device_count")
+
+
+def _tail(node: ast.AST) -> Optional[str]:
+    """Last dotted component of a Name/Attribute, else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _base_name(node: ast.AST) -> Optional[str]:
+    """Leftmost Name of an attribute chain (``np`` of ``np.asarray``)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _all_literal(args: List[ast.AST]) -> bool:
+    """True when every argument is a compile-time constant expression —
+    a host call on literals folds at trace time and never touches a
+    traced value."""
+    def lit(a: ast.AST) -> bool:
+        if isinstance(a, ast.Constant):
+            return True
+        if isinstance(a, (ast.Tuple, ast.List)):
+            return all(lit(e) for e in a.elts)
+        if isinstance(a, ast.UnaryOp):
+            return lit(a.operand)
+        return False
+    return all(lit(a) for a in args)
+
+
+# ---------------------------------------------------------------------------
+# RA1xx — compat layering (port of tests/test_compat.py's grep lint)
+# ---------------------------------------------------------------------------
+
+@register
+class CompatShardMapRule(Rule):
+    """RA101: ``shard_map`` must be imported from ``repro.compat``.
+
+    The symbol moved across JAX releases (``jax.experimental.shard_map``
+    -> ``jax.shard_map``, kwarg ``check_rep`` -> ``check_vma``);
+    ``compat.py`` resolves it exactly once for the supported range.
+    """
+
+    rule_id = "RA101"
+    severity = Severity.ERROR
+    title = "version-sensitive shard_map import outside repro.compat"
+    rationale = ("shard_map moved between JAX releases; repro.compat is "
+                 "the single resolution point (README 'JAX compatibility')")
+    exclude = ("compat.py",)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Flag shard_map imports/attributes that bypass repro.compat."""
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "repro.compat" or mod.endswith(".compat"):
+                    continue
+                if mod.startswith("jax") and (
+                        "shard_map" in mod
+                        or any(a.name == "shard_map" for a in node.names)):
+                    yield self.violation(
+                        ctx, node, f"import of shard_map from {mod!r}; use "
+                        f"'from repro.compat import shard_map'")
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("jax.experimental.shard_map"):
+                        yield self.violation(
+                            ctx, node, "import jax.experimental.shard_map; "
+                            "use repro.compat.shard_map")
+            elif isinstance(node, ast.Attribute) and node.attr == "shard_map":
+                base = _base_name(node)
+                if base == "jax":
+                    yield self.violation(
+                        ctx, node, "jax.shard_map attribute access; use "
+                        "repro.compat.shard_map")
+
+
+@register
+class CompatPallasParamsRule(Rule):
+    """RA102: Pallas TPU compiler params / prefetch grid specs resolve
+    only in ``repro.compat`` (``TPUCompilerParams`` vs ``CompilerParams``,
+    ``PrefetchScalarGridSpec`` naming moved across releases)."""
+
+    rule_id = "RA102"
+    severity = Severity.ERROR
+    title = "version-sensitive Pallas TPU symbol outside repro.compat"
+    rationale = ("pltpu.CompilerParams / TPUCompilerParams / "
+                 "PrefetchScalarGridSpec are renamed across JAX versions; "
+                 "repro.compat resolves them once")
+    exclude = ("compat.py",)
+
+    _MOVED = {"CompilerParams", "PrefetchScalarGridSpec", "PrefetchGridSpec"}
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Flag direct pltpu symbol use that bypasses repro.compat."""
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Name, ast.Attribute)) and \
+                    _tail(node) == "TPUCompilerParams":
+                yield self.violation(
+                    ctx, node, "TPUCompilerParams is version-specific; use "
+                    "repro.compat.CompilerParams")
+            elif isinstance(node, ast.Attribute) and node.attr in self._MOVED:
+                if _base_name(node) == "pltpu":
+                    yield self.violation(
+                        ctx, node, f"pltpu.{node.attr} is version-specific; "
+                        f"use repro.compat.{node.attr}")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.startswith("jax.experimental.pallas"):
+                    for a in node.names:
+                        if a.name in self._MOVED or \
+                                a.name == "TPUCompilerParams":
+                            yield self.violation(
+                                ctx, node, f"import of {a.name} from {mod}; "
+                                f"use repro.compat")
+
+
+# ---------------------------------------------------------------------------
+# RA2xx — hot-region hazards
+# ---------------------------------------------------------------------------
+
+class HotRule(Rule):
+    """Base for rules that only inspect inferred hot (traced) regions."""
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Fan out to :meth:`check_hot_node` over every hot AST node."""
+        for region, node in ctx.iter_hot_nodes():
+            yield from self.check_hot_node(ctx, region, node)
+
+    def check_hot_node(self, ctx: ModuleContext, region, node: ast.AST
+                       ) -> Iterable[Violation]:
+        """Yield violations for one node inside a hot region (override)."""
+        raise NotImplementedError
+
+
+@register
+class HostSyncRule(HotRule):
+    """RA201: no host synchronization inside traced code.
+
+    ``block_until_ready`` / ``.item()`` / ``jax.device_get`` /
+    ``np.asarray`` / ``np.array`` on a traced value force a device->host
+    transfer per call — inside a k-round fused dispatch that reintroduces
+    the per-round sync the engine exists to remove.
+    """
+
+    rule_id = "RA201"
+    severity = Severity.ERROR
+    title = "host sync inside a traced (jit/shard_map) region"
+    rationale = ("one stray sync inside a fused k-round dispatch erases "
+                 "the nested-stage wins of paper §III-IV")
+
+    _SYNC_ATTRS = {"block_until_ready", "item"}
+    _SYNC_JAX = {"device_get", "device_put"}
+    _SYNC_NP = {"asarray", "array", "copyto", "save", "savez"}
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag explicit sync calls in hot code."""
+        if not isinstance(node, ast.Call):
+            return
+        fn = node.func
+        tail = _tail(fn)
+        if isinstance(fn, ast.Attribute):
+            if tail in self._SYNC_ATTRS:
+                yield self.violation(
+                    ctx, node, f".{tail}() in hot region "
+                    f"{region.qualname!r} forces a device sync")
+            elif tail in self._SYNC_JAX and _base_name(fn) == "jax":
+                yield self.violation(
+                    ctx, node, f"jax.{tail} in hot region "
+                    f"{region.qualname!r} is a host transfer")
+            elif tail in self._SYNC_NP and _base_name(fn) in _NP_MODULES \
+                    and not _all_literal(node.args):
+                yield self.violation(
+                    ctx, node, f"np.{tail} on a traced value in hot region "
+                    f"{region.qualname!r} transfers to host; use jnp")
+
+
+@register
+class NumpyInHotRule(HotRule):
+    """RA202: no numpy *computation* inside traced code.
+
+    ``np.*`` calls on traced values either sync to host or fail at trace
+    time; dtype references (``np.float32`` as an argument) and literal-
+    only constant folding are allowed.  RA201 owns the conversion calls
+    (``asarray``/``array``); this rule owns everything else.
+    """
+
+    rule_id = "RA202"
+    severity = Severity.ERROR
+    title = "numpy call inside a traced region"
+    rationale = "numpy computes on host; traced values must stay in jnp/lax"
+
+    _EXEMPT = HostSyncRule._SYNC_NP  # RA201's findings, not duplicated here
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag non-literal np.* calls in hot code."""
+        if not isinstance(node, ast.Call):
+            return
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and _base_name(fn) in _NP_MODULES \
+                and fn.attr not in self._EXEMPT \
+                and not _all_literal(node.args):
+            yield self.violation(
+                ctx, node, f"np.{fn.attr}(...) in hot region "
+                f"{region.qualname!r} runs on host; use jnp.{fn.attr}")
+
+
+@register
+class ImplicitCastRule(HotRule):
+    """RA203: no ``float()``/``int()``/``bool()`` on array expressions in
+    traced code — they call ``__float__`` on the tracer, which is a
+    concretization (host sync) or a trace error.  Heuristic: only flagged
+    when the argument contains a call or subscript (casting a static
+    Python scalar like ``float(num_nodes)`` is fine)."""
+
+    rule_id = "RA203"
+    severity = Severity.ERROR
+    title = "implicit scalar cast of a traced value"
+    rationale = ("float()/int() on a tracer concretizes it — host sync or "
+                 "ConcretizationTypeError")
+
+    _CASTS = {"float", "int", "bool"}
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag float()/int()/bool() over computed expressions."""
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in self._CASTS and len(node.args) == 1):
+            return
+        arg = node.args[0]
+        if any(isinstance(n, (ast.Call, ast.Subscript))
+               for n in ast.walk(arg)):
+            yield self.violation(
+                ctx, node, f"{node.func.id}() over a computed expression in "
+                f"hot region {region.qualname!r} concretizes a traced value")
+
+
+@register
+class DeviceLoopRule(HotRule):
+    """RA204: no Python ``for`` over devices/nodes inside traced code —
+    it unrolls the mesh into the program (one copy of the body per
+    device), defeating SPMD and exploding compile time.  Loops over plan
+    *layers* (depth) are the intended unrolling and are not flagged."""
+
+    rule_id = "RA204"
+    severity = Severity.ERROR
+    title = "Python loop over devices inside a traced region"
+    rationale = ("for-over-devices inside jit unrolls the mesh; device "
+                 "parallelism belongs to shard_map/collectives")
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag for-loops whose iterable is device-shaped."""
+        if not isinstance(node, ast.For):
+            return
+        it = node.iter
+        src = ast.unparse(it)
+        if isinstance(it, ast.Call):
+            tail = _tail(it.func)
+            if tail in ("devices", "local_devices"):
+                yield self.violation(
+                    ctx, node, f"iterating {src!r} in hot region "
+                    f"{region.qualname!r}")
+                return
+            if tail == "range" and _DEVICEISH_RE.search(src):
+                yield self.violation(
+                    ctx, node, f"for over {src!r} in hot region "
+                    f"{region.qualname!r} unrolls per-device work")
+
+
+@register
+class Float64Rule(HotRule):
+    """RA205: no float64 on device paths.  TPUs emulate f64 (slow) and
+    the stack's wire/merge formats are f32; the f64 oracles (simulator,
+    sim graph loops) are host code and stay exempt because this rule only
+    fires inside traced regions."""
+
+    rule_id = "RA205"
+    severity = Severity.ERROR
+    title = "float64 dtype inside a traced region"
+    rationale = ("device paths are fp32 end-to-end (kernels, wire format); "
+                 "f64 silently deoptimizes and breaks parity with benches")
+
+    _F64 = {"float64", "double", "f64", "complex128"}
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag f64 dtype references in hot code."""
+        if isinstance(node, ast.Attribute) and node.attr in self._F64 and \
+                _base_name(node) in (_NP_MODULES | {"jnp", "jax"}):
+            yield self.violation(
+                ctx, node, f"{ast.unparse(node)} in hot region "
+                f"{region.qualname!r}; device paths are fp32")
+        elif isinstance(node, ast.Constant) and node.value in self._F64:
+            yield self.violation(
+                ctx, node, f"dtype string {node.value!r} in hot region "
+                f"{region.qualname!r}; device paths are fp32")
+
+
+@register
+class DebugInHotRule(HotRule):
+    """RA206: no ``print`` / ``breakpoint`` / ``pdb`` inside traced code.
+    A bare ``print`` runs once at trace time (misleading) and pins host
+    objects; use ``jax.debug.print`` (which is allowed) for runtime
+    values."""
+
+    rule_id = "RA206"
+    severity = Severity.WARNING
+    title = "host debug call inside a traced region"
+    rationale = ("print in a traced fn fires at trace time, not run time; "
+                 "jax.debug.print is the traced-safe spelling")
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag print()/breakpoint()/pdb.set_trace() in hot code."""
+        if not isinstance(node, ast.Call):
+            return
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in ("print", "breakpoint"):
+            yield self.violation(
+                ctx, node, f"{fn.id}() in hot region {region.qualname!r}; "
+                f"use jax.debug.print for runtime values")
+        elif isinstance(fn, ast.Attribute) and fn.attr == "set_trace" and \
+                _base_name(fn) in ("pdb", "ipdb"):
+            yield self.violation(
+                ctx, node, f"debugger entry in hot region "
+                f"{region.qualname!r}")
+
+
+# ---------------------------------------------------------------------------
+# RA3xx — jit hygiene
+# ---------------------------------------------------------------------------
+
+@register
+class StaticArgHashableRule(Rule):
+    """RA301: parameters declared static to ``jit`` must be hashable.
+
+    A list/dict/set default on a ``static_argnums``/``static_argnames``
+    parameter raises ``TypeError: unhashable type`` on the first call
+    that relies on the default — typically in a rarely-exercised branch,
+    long after the jit was written.
+    """
+
+    rule_id = "RA301"
+    severity = Severity.ERROR
+    title = "unhashable default on a static jit argument"
+    rationale = ("jit static args are dict keys of the compilation cache; "
+                 "unhashable defaults explode at call time")
+
+    _JIT = {"jit", "pjit"}
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Correlate jit static-arg declarations with target defaults."""
+        defs = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, node)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    kw = self._static_kwargs(dec)
+                    if kw:
+                        yield from self._check_target(ctx, node, kw)
+            elif isinstance(node, ast.Call):
+                kw = self._static_kwargs(node)
+                if kw and node.args:
+                    target = defs.get(_tail(node.args[0]) or "")
+                    if target is not None:
+                        yield from self._check_target(ctx, target, kw)
+
+    def _static_kwargs(self, node: ast.AST) -> dict:
+        """{'static_argnums': node, ...} when ``node`` is a jit(...) or
+        partial(jit, ...) call carrying static-arg declarations."""
+        if not isinstance(node, ast.Call):
+            return {}
+        tail = _tail(node.func)
+        if tail == "partial" and node.args and \
+                _tail(node.args[0]) in self._JIT:
+            tail = _tail(node.args[0])
+        if tail not in self._JIT:
+            return {}
+        return {k.arg: k.value for k in node.keywords
+                if k.arg in ("static_argnums", "static_argnames")}
+
+    def _check_target(self, ctx, fn, static_kw):
+        """Flag unhashable defaults on the declared-static params."""
+        args = fn.args.posonlyargs + fn.args.args
+        names: Set[str] = set()
+        nums = static_kw.get("static_argnums")
+        if nums is not None:
+            for idx in self._int_values(nums):
+                if 0 <= idx < len(args):
+                    names.add(args[idx].arg)
+        argnames = static_kw.get("static_argnames")
+        if argnames is not None:
+            names |= set(self._str_values(argnames))
+        defaults = dict(zip([a.arg for a in args[len(args)
+                                                 - len(fn.args.defaults):]],
+                            fn.args.defaults))
+        defaults.update(
+            {a.arg: d for a, d in zip(fn.args.kwonlyargs,
+                                      fn.args.kw_defaults) if d is not None})
+        for name in sorted(names):
+            d = defaults.get(name)
+            if d is not None and isinstance(
+                    d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.DictComp, ast.SetComp)):
+                yield self.violation(
+                    ctx, d, f"static jit arg {name!r} of {fn.name!r} has an "
+                    f"unhashable {type(d).__name__.lower()} default; use a "
+                    f"tuple/frozenset")
+
+    @staticmethod
+    def _int_values(node: ast.AST) -> List[int]:
+        """Constant ints inside a static_argnums expression."""
+        return [n.value for n in ast.walk(node)
+                if isinstance(n, ast.Constant) and isinstance(n.value, int)]
+
+    @staticmethod
+    def _str_values(node: ast.AST) -> List[str]:
+        """Constant strs inside a static_argnames expression."""
+        return [n.value for n in ast.walk(node)
+                if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+
+
+# ---------------------------------------------------------------------------
+# RA4xx — documentation (port of tests/test_docs.py's ast docstring lint)
+# ---------------------------------------------------------------------------
+
+def _public_defs(tree: ast.AST):
+    """(qualname, node) for public module-level functions/classes and
+    public methods of public classes (the shape the old
+    tests/test_docs.py lint checked)."""
+    out = []
+    for n in tree.body:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)) and not n.name.startswith("_"):
+            out.append((n.name, n))
+            if isinstance(n, ast.ClassDef):
+                out.extend((f"{n.name}.{m.name}", m) for m in n.body
+                           if isinstance(m, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))
+                           and not m.name.startswith("_"))
+    return out
+
+
+@register
+class PublicDocstringRule(Rule):
+    """RA401: every public function/class/method in the documented
+    surface (``core/*``, ``analysis/*``) carries a docstring — the
+    tuner/cache PR made core the documented API layer; the analysis layer
+    holds itself to the same bar."""
+
+    rule_id = "RA401"
+    severity = Severity.ERROR
+    title = "public symbol without a docstring"
+    rationale = ("core/ and analysis/ are the documented surface "
+                 "(ARCHITECTURE.md); undocumented publics rot first")
+    scope = ("core/*.py", "analysis/*.py")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Flag public defs missing docstrings."""
+        for qual, node in _public_defs(ctx.tree):
+            if ast.get_docstring(node) is None:
+                yield self.violation(
+                    ctx, node, f"public symbol {qual!r} has no docstring")
+
+
+@register
+class ModuleDocstringRule(Rule):
+    """RA402: every module under ``src/repro`` opens with a docstring
+    saying what it is — the repo's modules are the unit of navigation in
+    ARCHITECTURE.md's module map."""
+
+    rule_id = "RA402"
+    severity = Severity.WARNING
+    title = "module without a docstring"
+    rationale = "ARCHITECTURE.md's module map is built from these"
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Flag modules whose first statement is not a docstring."""
+        if ast.get_docstring(ctx.tree) is None:
+            yield self.violation(
+                ctx, ctx.tree.body[0] if getattr(ctx.tree, "body", None)
+                else ctx.tree, "module has no docstring")

@@ -1,0 +1,124 @@
+"""Result datatypes shared by the lint engine and the jaxpr auditor.
+
+Everything here is plain data with a ``to_dict`` — the CLI's ``--json``
+output and the regression tests consume the same machine-readable shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+
+class Severity:
+    """Violation severity levels (plain strings, ordered ERROR > WARNING).
+
+    ``ERROR`` fails the default CLI run; ``WARNING`` only fails under
+    ``--strict`` (which treats every finding as fatal).
+    """
+
+    ERROR = "error"
+    WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One lint finding: a rule fired at a source location."""
+
+    rule_id: str
+    severity: str
+    path: str            # display path of the offending file
+    line: int            # 1-based line of the offending node
+    col: int             # 0-based column
+    message: str
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready mapping (the ``--json`` record shape)."""
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        """``path:line:col: RULE severity: message`` (editor-clickable)."""
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule_id} "
+                f"{self.severity}: {self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckResult:
+    """One auditor assertion over a traced jaxpr."""
+
+    check_id: str
+    ok: bool
+    expected: Any
+    actual: Any
+    detail: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready mapping."""
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        """Single-line pass/fail summary."""
+        mark = "ok" if self.ok else "FAIL"
+        return (f"[{mark}] {self.check_id}: expected {self.expected!r}, "
+                f"actual {self.actual!r}"
+                + (f" ({self.detail})" if self.detail else ""))
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """All checks run against one traced entry point."""
+
+    target: str
+    checks: List[CheckResult] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        """True iff every check passed."""
+        return all(c.ok for c in self.checks)
+
+    def failures(self) -> List[CheckResult]:
+        """The failing checks only."""
+        return [c for c in self.checks if not c.ok]
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready mapping."""
+        return {"target": self.target, "ok": self.ok,
+                "checks": [c.to_dict() for c in self.checks]}
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """Combined lint + audit outcome (what ``--json`` serializes)."""
+
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+    audits: List[AuditReport] = dataclasses.field(default_factory=list)
+    files_checked: int = 0
+
+    @property
+    def errors(self) -> List[Violation]:
+        """Violations at ERROR severity."""
+        return [v for v in self.violations if v.severity == Severity.ERROR]
+
+    def ok(self, strict: bool = False) -> bool:
+        """Clean under the given strictness: no audit failures, no errors,
+        and (``strict``) no warnings either."""
+        if any(not a.ok for a in self.audits):
+            return False
+        bad = self.violations if strict else self.errors
+        return not bad
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready mapping."""
+        return {
+            "files_checked": self.files_checked,
+            "violations": [v.to_dict() for v in self.violations],
+            "audits": [a.to_dict() for a in self.audits],
+        }
+
+    def to_json(self, path: Optional[str] = None, indent: int = 1) -> str:
+        """Serialize (and optionally write) the report as JSON."""
+        text = json.dumps(self.to_dict(), indent=indent)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

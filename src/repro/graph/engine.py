@@ -241,6 +241,31 @@ class GraphEngine:
         return jax.jit(run_k)
 
     # ---------------------------------------------------------------------
+    def run_fn(self, k: int, collect: str = "last"):
+        """The jitted k-round callable ``run(state, extras, *routing) ->
+        (final, last_out, traj)`` that :meth:`run` dispatches, without
+        executing it.  ``engine.run_fn(k)(state, extras,
+        *engine.routing_args())`` is exactly one dispatch; the static
+        auditor (``repro.analysis.auditor``) traces this to verify the
+        whole k-round block lowers to a single ``lax.scan`` with all
+        collectives inside.  Cached per ``(k, collect)`` like :meth:`run`.
+        """
+        if collect not in ("last", "trajectory"):
+            raise ValueError(f"collect must be 'last' or 'trajectory', "
+                             f"got {collect!r}")
+        if k < 1:
+            raise ValueError(f"need k >= 1 rounds, got {k}")
+        fn = self._run_cache.get((k, collect))
+        if fn is None:
+            fn = self._run_cache[(k, collect)] = self._build(k, collect)
+        return fn
+
+    def routing_args(self):
+        """The frozen routing tensors :meth:`run` threads into every
+        dispatch (positionally after ``state, extras``)."""
+        return self._routing
+
+    # ---------------------------------------------------------------------
     def run(self, k: int, state, extras=None, *, collect: str = "last"):
         """Execute k rounds in ONE jitted dispatch.
 
@@ -260,14 +285,7 @@ class GraphEngine:
         """
         import jax.numpy as jnp
         from jax.tree_util import tree_map
-        if collect not in ("last", "trajectory"):
-            raise ValueError(f"collect must be 'last' or 'trajectory', "
-                             f"got {collect!r}")
-        if k < 1:
-            raise ValueError(f"need k >= 1 rounds, got {k}")
-        fn = self._run_cache.get((k, collect))
-        if fn is None:
-            fn = self._run_cache[(k, collect)] = self._build(k, collect)
+        fn = self.run_fn(k, collect)
         state = tree_map(jnp.asarray, state)
         extras = tree_map(jnp.asarray, extras if extras is not None else {})
         final, last_out, traj = fn(state, extras, *self._routing)

@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the stack's compute hot-spots.
+
+``onehot_scatter`` / ``rank_merge`` / ``spmv_ell`` are the custom
+kernels (with ``ref.py`` pure-jnp references and ``ops.py`` dispatch
+wrappers); ``costmodel.py`` prices them for the autotuner.
+"""

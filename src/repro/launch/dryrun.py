@@ -1,3 +1,5 @@
+"""Dry-run launcher: trace assigned model/shape pairs on 512 fake host
+devices and report modeled memory, collective bytes and step cost."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """SPerf hillclimb driver — three studies on the three selected pairs.
 
 H1 (paper-representative): gemma3-12b x train_minibatch — gradient-sync
@@ -15,6 +12,9 @@ H3 (worst useful-compute): jamba-1.5-large-398b x train_4k — remat policy
 Each run re-lowers + re-compiles and records the roofline terms; results in
 results/perf/*.json and summarized in EXPERIMENTS.md SPerf.
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 

@@ -1,0 +1,15 @@
+"""Fixture: RA101 negative — the compat import and innocent near-misses."""
+from repro.compat import shard_map
+
+
+def wrap(body, mesh, spec):
+    # bare name resolved through compat: fine
+    return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
+
+
+SHARD_MAP_DOC = "strings mentioning jax.experimental.shard_map are fine"
+
+
+def uses_own_attr(obj):
+    # shard_map attribute on a non-jax object is not the moved symbol
+    return obj.helper.run(obj)

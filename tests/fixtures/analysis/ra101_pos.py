@@ -1,0 +1,11 @@
+"""Fixture: RA101 positive — shard_map resolved around repro.compat."""
+import jax
+
+from jax.experimental.shard_map import shard_map  # expect: RA101
+from jax.experimental import shard_map as smap  # expect: RA101
+import jax.experimental.shard_map as sm_mod  # expect: RA101
+
+
+def wrap(body, mesh, spec):
+    return jax.shard_map(body, mesh=mesh, in_specs=spec,  # expect: RA101
+                         out_specs=spec)

@@ -1,0 +1,16 @@
+"""Fixture: RA102 negative — compat-resolved params and near-misses."""
+from repro.compat import CompilerParams, PrefetchScalarGridSpec
+
+
+def make_params():
+    # resolved once in repro.compat: fine
+    return CompilerParams(dimension_semantics=("parallel",))
+
+
+def make_grid_spec(n):
+    return PrefetchScalarGridSpec(num_scalar_prefetch=1, grid=(n,))
+
+
+def own_namespace(cfg):
+    # CompilerParams attribute on a non-pltpu object is unrelated
+    return cfg.CompilerParams

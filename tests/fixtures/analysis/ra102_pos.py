@@ -1,0 +1,13 @@
+"""Fixture: RA102 positive — Pallas TPU symbols resolved around compat."""
+from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas.tpu import TPUCompilerParams  # expect: RA102
+
+
+def make_params():
+    return pltpu.CompilerParams(  # expect: RA102
+        dimension_semantics=("parallel",))
+
+
+def make_grid_spec(n):
+    return pltpu.PrefetchScalarGridSpec(  # expect: RA102
+        num_scalar_prefetch=1, grid=(n,))

@@ -1,0 +1,18 @@
+"""Fixture: RA201 negative — syncs on the host side of the dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    # literal-only conversion folds at trace time: fine
+    scale = np.asarray((0.5, 2.0))
+    return x * jnp.asarray(scale)[0]
+
+
+def host_driver(x):
+    # host code around the dispatch syncs legitimately
+    out = step(x)
+    out.block_until_ready()
+    return np.asarray(out)

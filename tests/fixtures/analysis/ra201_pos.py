@@ -1,0 +1,13 @@
+"""Fixture: RA201 positive — host syncs inside a jitted region."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    y = x * 2
+    host = np.asarray(y)  # expect: RA201
+    y.block_until_ready()  # expect: RA201
+    moved = jax.device_get(y)  # expect: RA201
+    return y + jnp.float32(host.sum() + moved.sum() + y.item())  # expect: RA201

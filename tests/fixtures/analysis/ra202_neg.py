@@ -1,0 +1,16 @@
+"""Fixture: RA202 negative — dtype tags and literal-only numpy in traced
+code, real numpy on the host."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    # dtype attribute reference (no call) and literal-only constants fold
+    mask = np.zeros((4, 4))
+    return jnp.mean(x.astype(np.float32)) + jnp.asarray(mask)
+
+
+def host_stats(x):
+    return np.mean(np.asarray(x))

@@ -1,0 +1,10 @@
+"""Fixture: RA202 positive — numpy computation inside a jitted region."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    m = np.mean(x)  # expect: RA202
+    clipped = np.clip(x, -1.0, 1.0)  # expect: RA202
+    return (x - m) + clipped

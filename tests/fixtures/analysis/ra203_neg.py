@@ -1,0 +1,15 @@
+"""Fixture: RA203 negative — casts of static Python scalars are fine."""
+import jax
+
+
+@jax.jit
+def step(x, num_nodes, flag):
+    # static config scalars (no call/subscript in the argument)
+    scale = float(num_nodes)
+    on = bool(flag)
+    return x * scale if on else x
+
+
+def host_cast(arr):
+    # host side: concretization is the point
+    return float(arr.sum())

@@ -1,0 +1,10 @@
+"""Fixture: RA203 positive — scalar casts concretizing traced values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    total = float(jnp.sum(x))  # expect: RA203
+    first = int(x[0])  # expect: RA203
+    return x / total + first

@@ -1,0 +1,18 @@
+"""Fixture: RA204 negative — plan-depth unrolls and host-side device
+enumeration."""
+import jax
+
+
+@jax.jit
+def step(x, layers):
+    acc = x
+    # unrolling over butterfly layers (plan depth) is the intended shape
+    for scale in layers:
+        acc = acc * scale
+    for _ in range(len(layers)):
+        acc = acc + 1
+    return acc
+
+
+def host_topology():
+    return [d.id for d in jax.devices()]

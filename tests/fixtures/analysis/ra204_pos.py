@@ -1,0 +1,12 @@
+"""Fixture: RA204 positive — Python loops over devices in traced code."""
+import jax
+
+
+@jax.jit
+def step(x, num_devices):
+    acc = x
+    for i in range(num_devices):  # expect: RA204
+        acc = acc + i
+    for dev in jax.devices():  # expect: RA204
+        acc = acc * 1
+    return acc

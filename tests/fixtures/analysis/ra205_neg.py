@@ -1,0 +1,14 @@
+"""Fixture: RA205 negative — fp32 device path, f64 host oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    return x.astype(jnp.float32) + jnp.zeros((4,), dtype="float32")
+
+
+def oracle(x):
+    # host-side reference computation keeps full precision
+    return np.asarray(x, np.float64).sum()

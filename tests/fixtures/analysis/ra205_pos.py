@@ -1,0 +1,10 @@
+"""Fixture: RA205 positive — float64 on a traced device path."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    wide = x.astype(jnp.float64)  # expect: RA205
+    zeros = jnp.zeros((4,), dtype="float64")  # expect: RA205
+    return wide + zeros

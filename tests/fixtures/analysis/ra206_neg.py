@@ -1,0 +1,13 @@
+"""Fixture: RA206 negative — jax.debug.print in traced code, print on
+the host."""
+import jax
+
+
+@jax.jit
+def step(x):
+    jax.debug.print("x = {}", x)
+    return x * 2
+
+
+def host_report(out):
+    print("result:", out)

@@ -1,0 +1,10 @@
+"""Fixture: RA206 positive — host debug calls inside traced code."""
+import jax
+import pdb
+
+
+@jax.jit
+def step(x):
+    print("tracing with", x)  # expect: RA206
+    pdb.set_trace()  # expect: RA206
+    return x * 2

@@ -1,0 +1,19 @@
+"""Fixture: RA301 negative — hashable static defaults; unhashable
+defaults on non-static args."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnums=(1,))
+def step(x, cfg=(4, 2)):  # tuple default: hashable
+    return x * len(cfg)
+
+
+def plain(x, opts=[1]):  # never declared static: list default is fine
+    return x
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def other(x, mode="sort", buf=[0]):  # buf is traced, not static
+    return x

@@ -1,0 +1,16 @@
+"""Fixture: RA301 positive — unhashable defaults on static jit args."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnums=(1,))
+def step(x, cfg=[4, 2]):  # expect: RA301
+    return x * len(cfg)
+
+
+def run(x, opts={}):  # expect: RA301
+    return x
+
+
+run_jit = jax.jit(run, static_argnames=("opts",))

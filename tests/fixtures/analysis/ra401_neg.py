@@ -1,0 +1,11 @@
+"""Fixture: RA401 negative (scope) — undocumented publics OUTSIDE the
+core/analysis surface are not this rule's business."""
+
+
+def free_helper(x):
+    return x
+
+
+class Scratch:
+    def poke(self):
+        return None

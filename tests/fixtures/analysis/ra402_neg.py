@@ -1,0 +1,4 @@
+"""Fixture: RA402 negative — the module says what it is."""
+import os
+
+SEP = os.sep

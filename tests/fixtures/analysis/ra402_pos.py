@@ -1,0 +1,3 @@
+import os  # expect: RA402
+
+SEP = os.sep

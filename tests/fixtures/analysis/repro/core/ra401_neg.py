@@ -1,0 +1,21 @@
+"""Fixture: RA401 negative — documented publics, undocumented privates."""
+
+
+def reduce_all(values):
+    """Sum the values."""
+    return values
+
+
+class Planner:
+    """Plans things."""
+
+    def plan(self):
+        """Return the plan."""
+        return None
+
+    def _internal(self):
+        return None
+
+
+def _helper():
+    return 0

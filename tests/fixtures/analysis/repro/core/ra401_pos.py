@@ -1,0 +1,14 @@
+"""Fixture: RA401 positive — undocumented publics in the documented
+surface (this file's fixture path maps to ``core/`` scope)."""
+
+
+def reduce_all(values):  # expect: RA401
+    return values
+
+
+class Planner:  # expect: RA401
+    def plan(self):  # expect: RA401
+        return None
+
+    def _internal(self):
+        return None

@@ -1,11 +1,11 @@
-"""repro.compat: version-shim resolution (both branches) + layering rule.
+"""repro.compat: version-shim resolution (both branches).
 
 The resolvers are pure functions over module objects, so both the
 0.4.x branch and the promoted-API branch are testable on any installed
-JAX by handing them fakes.
+JAX by handing them fakes.  The layering rule (these symbols resolve
+only in compat.py) lives in the lint engine now — rules RA101/RA102 in
+``repro.analysis.rules``, enforced repo-wide by tests/test_analysis.py.
 """
-import pathlib
-import re
 import types
 
 import pytest
@@ -134,34 +134,3 @@ def test_resolve_prefetch_grid_spec_missing_raises():
 def test_prefetch_grid_spec_usable_on_installed_jax():
     gs = compat.PrefetchScalarGridSpec(num_scalar_prefetch=1, grid=(2,))
     assert gs.grid == (2,)
-
-
-# ---------------------------------------------------------------------------
-# Layering rule: compat.py is the only module touching the moved symbols
-# ---------------------------------------------------------------------------
-
-_FORBIDDEN = [
-    r"from\s+jax\s+import\s+[^\n]*\bshard_map\b",
-    r"from\s+jax\.experimental\s+import\s+[^\n]*\bshard_map\b",
-    r"from\s+jax\.experimental\.shard_map\s+import",
-    r"import\s+jax\.experimental\.shard_map",
-    r"\bjax\.shard_map\b",
-    r"\bTPUCompilerParams\b",
-    r"pltpu\.CompilerParams\b",
-    r"pltpu\.PrefetchScalarGridSpec\b",
-]
-
-
-def test_no_version_sensitive_imports_outside_compat():
-    pkg_root = pathlib.Path(compat.__file__).resolve().parent   # src/repro
-    offenders = []
-    for path in sorted(pkg_root.rglob("*.py")):
-        if path.name == "compat.py":
-            continue
-        text = path.read_text()
-        for pat in _FORBIDDEN:
-            if re.search(pat, text):
-                offenders.append((str(path.relative_to(pkg_root)), pat))
-    assert not offenders, (
-        "version-sensitive JAX symbols must be imported via repro.compat: "
-        f"{offenders}")

@@ -128,37 +128,5 @@ def test_train_help_mentions_auto_and_engine():
     for needle in ("calibrat", "cache"):
         assert needle in text, f"--dp-degrees help must mention {needle}"
 
-
-def _public_defs(tree):
-    """(name, node) for public module-level functions/classes and public
-    methods of public classes."""
-    import ast
-    out = []
-    for n in tree.body:
-        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
-                          ast.ClassDef)) and not n.name.startswith("_"):
-            out.append((n.name, n))
-            if isinstance(n, ast.ClassDef):
-                out.extend((f"{n.name}.{m.name}", m) for m in n.body
-                           if isinstance(m, (ast.FunctionDef,
-                                             ast.AsyncFunctionDef))
-                           and not m.name.startswith("_"))
-    return out
-
-
-def test_core_public_api_has_docstrings():
-    """Grep-lint (ast-lint) for the paper-contribution layer: every public
-    function, class and method in src/repro/core/*.py carries a docstring
-    — the tuner/cache PR made core the documented surface; keep it that
-    way."""
-    import ast
-    core = os.path.join(ROOT, "src", "repro", "core")
-    missing = []
-    for fname in sorted(os.listdir(core)):
-        if not fname.endswith(".py"):
-            continue
-        rel = os.path.join("src", "repro", "core", fname)
-        tree = ast.parse(_read(rel))
-        missing += [f"{fname}:{name}" for name, node in _public_defs(tree)
-                    if ast.get_docstring(node) is None]
-    assert not missing, f"public core symbols missing docstrings: {missing}"
+# The public-docstring ast lint moved onto the rule engine: RA401 in
+# repro.analysis.rules, enforced repo-wide by tests/test_analysis.py.
