@@ -1,0 +1,133 @@
+"""Resilience soak benchmarks (``--only soak``; PR 7).
+
+Three row families quantifying the cost of surviving:
+
+* ``soak/recovery_*`` — recovery latency per fault tier: *absorbed*
+  faults (weights-only ``reconfig_dead`` repair), a *cold* shrink
+  (replan + config over survivors) and a *warm* shrink (same survivor
+  set again — supervisor instance cache), against the fault-free reduce
+  as the baseline; plus supervised reduce latency vs fault rate under a
+  live random schedule.
+* ``soak/replan_cache_*`` — replan cache-hit rate over repeated shrinks
+  (flip-flopping dead sets must not re-trace).
+* ``soak/resume_*`` — checkpoint + exact-resume overhead per interval:
+  atomic ``store.save`` + ``load_flat`` round-trip for a train-sized
+  state tree, amortized per step for intervals {1, 2, 4}.
+
+Wall times are host-dependent; the derived columns carry the
+reproducible quantities (event classes, hit rates, artifact bytes).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+M, R, RANGE, NNZ = 4, 2, 300, 40
+
+
+def _fleet(dead=None, probe=None, schedule=None, **kw):
+    from repro.resilience import DegradedPolicy, ResilientAllreduce
+    rng = np.random.RandomState(3)
+    outs = [np.sort(rng.choice(RANGE, NNZ, replace=False)).astype(np.uint32)
+            for _ in range(M)]
+    ins = [np.sort(rng.choice(RANGE, NNZ, replace=False)).astype(np.uint32)
+           for _ in range(M)]
+    vals = [(rng.randint(-128, 129, NNZ) / 64.0).astype(np.float32)
+            for _ in range(M)]
+    ra = ResilientAllreduce(M, (2, 2), replication=R, dead=dead,
+                            probe=probe, schedule=schedule,
+                            policy=DegradedPolicy(max_retries=0), seed=0,
+                            expected_nnz=NNZ, index_range=RANGE, **kw)
+    ra.config(outs, ins)
+    return ra, vals
+
+
+def bench_soak_recovery_latency() -> List[Row]:
+    """Latency of each recovery tier, one supervised reduce per row."""
+    rows: List[Row] = []
+    deads = {"baseline": None, "absorbed_repair": {5},
+             "shrink_cold": {1, 5}, "shrink_warm": {1, 5}}
+    probe_box = {"dead": None}
+    ra, vals = _fleet(probe=lambda s, a: probe_box["dead"])
+    ra.reduce(vals)                       # warm the fault-free compile
+    for name, dead in deads.items():
+        probe_box["dead"] = dead
+        t0 = time.perf_counter()
+        out = ra.reduce(vals)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"soak/recovery_{name}", dt,
+                     f"klass={out.event.klass} degraded={out.degraded}"))
+    # supervised reduce latency vs fault rate (live random schedule)
+    from repro.core.faults import make_schedule
+    for f in (0, 1, 2):
+        sched = make_schedule("random", M * R, f, seed=9)
+        ra, vals = _fleet(schedule=sched)
+        t0 = time.perf_counter()
+        steps = 6
+        for s in range(steps):
+            ra.reduce(vals, step=s)
+        dt = (time.perf_counter() - t0) * 1e6 / steps
+        st = ra.stats
+        rows.append((f"soak/recovery_vs_rate_f{f}", dt,
+                     f"absorbed={st['absorbed']} shrinks={st['shrinks']} "
+                     f"reuses={st['shrink_reuses']}"))
+    return rows
+
+
+def bench_soak_replan_cache_hits() -> List[Row]:
+    """Repeated shrinks to a previously seen survivor set must be
+    supervisor-cache hits (no replan, no retrace)."""
+    flip = [None, {1, 5}, None, {1, 5}, {2, 6}, {1, 5}, {2, 6}]
+    ra, vals = _fleet(probe=lambda s, a: flip[s % len(flip)])
+    t0 = time.perf_counter()
+    for s in range(len(flip) * 2):
+        ra.reduce(vals, step=s)
+    dt = (time.perf_counter() - t0) * 1e6 / (len(flip) * 2)
+    st = ra.stats
+    hits = st["shrink_reuses"] / max(1, st["shrinks"] + st["shrink_reuses"])
+    return [("soak/replan_cache_hit_rate", dt,
+             f"hit_rate={hits:.2f} shrinks={st['shrinks']} "
+             f"reuses={st['shrink_reuses']} repairs={st['repairs']}")]
+
+
+def bench_soak_resume_overhead() -> List[Row]:
+    """Atomic checkpoint save + load round-trip for a train-sized tree,
+    amortized per step for checkpoint intervals {1, 2, 4}."""
+    from repro.checkpoint import store
+    rng = np.random.RandomState(0)
+    tree = {"params": {f"layer{i}": rng.randn(64, 256).astype(np.float32)
+                       for i in range(8)},
+            "opt_m": {f"layer{i}": rng.randn(64, 256).astype(np.float32)
+                      for i in range(8)},
+            "opt_step": np.int32(7)}
+    nbytes = sum(v.nbytes for d in ("params", "opt_m")
+                 for v in tree[d].values()) + 4
+    rows: List[Row] = []
+    d = tempfile.mkdtemp(prefix="bench_soak_")
+    try:
+        base = f"{d}/ckpt-1"
+        store.save(base, tree, meta={"step": 1})    # warm the fs path
+        reps = 5
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            store.save(base, tree, meta={"step": 1})
+            store.load_flat(base)
+        per_ckpt = (time.perf_counter() - t0) * 1e6 / reps
+        for interval in (1, 2, 4):
+            rows.append((f"soak/resume_overhead_every{interval}",
+                         per_ckpt / interval,
+                         f"bytes={nbytes} save+load_us={per_ckpt:.0f} "
+                         f"interval={interval}"))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+ALL_BENCHES = [bench_soak_recovery_latency, bench_soak_replan_cache_hits,
+               bench_soak_resume_overhead]

@@ -1,7 +1,8 @@
 """The lint rule catalog — every repo invariant the linter enforces.
 
 Naming: ``RA1xx`` compat layering, ``RA2xx`` hot-region (traced code)
-hazards, ``RA3xx`` jit hygiene, ``RA4xx`` documentation.  Each rule has
+hazards, ``RA3xx`` jit hygiene, ``RA4xx`` documentation, ``RA5xx``
+resilience invariants (fault handling + checkpoint safety).  Each rule has
 positive + negative fixtures under ``tests/fixtures/analysis/`` (file
 name prefixed with the lower-cased rule id) and is regression-tested by
 ``tests/test_analysis.py``; the whole catalog must pass over
@@ -511,3 +512,95 @@ class ModuleDocstringRule(Rule):
             yield self.violation(
                 ctx, ctx.tree.body[0] if getattr(ctx.tree, "body", None)
                 else ctx.tree, "module has no docstring")
+
+
+# ---------------------------------------------------------------------------
+# RA5xx — resilience invariants (fault handling + checkpoint safety)
+# ---------------------------------------------------------------------------
+
+def _silent_body(body: List[ast.stmt]) -> bool:
+    """True when an except body does nothing: only ``pass``, ``...``/
+    constant expressions, or ``continue`` — the handler observes a fault
+    and drops it on the floor."""
+    for st in body:
+        if isinstance(st, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(st, ast.Expr) and isinstance(st.value, ast.Constant):
+            continue
+        return False
+    return True
+
+
+def _handler_names(h: ast.ExceptHandler) -> Set[str]:
+    """Exception type names a handler catches (tails of dotted names)."""
+    types = h.type.elts if isinstance(h.type, ast.Tuple) else [h.type]
+    return {t for t in (_tail(n) for n in types) if t}
+
+
+@register
+class DeadNodeSwallowRule(Rule):
+    """RA501: outside ``repro.resilience`` nothing may swallow a
+    :class:`DeadLogicalNode` — bare ``except:`` handlers and handlers
+    that catch ``DeadLogicalNode`` just to ``pass`` hide a fatal fault
+    from the supervision layer, turning a survivable failure into a
+    silently wrong reduction (paper §V's guarantee only holds when the
+    dead set reaches the replanner)."""
+
+    rule_id = "RA501"
+    severity = Severity.ERROR
+    title = "fault swallowed outside the resilience layer"
+    rationale = ("DeadLogicalNode is the supervisor's only detection "
+                 "signal; swallowing it bypasses replan-over-survivors "
+                 "(repro.resilience) and corrupts results")
+    exclude = ("resilience/*",)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Flag bare excepts and pass-only DeadLogicalNode handlers."""
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.violation(
+                    ctx, node, "bare 'except:' can swallow "
+                    "DeadLogicalNode (and everything else); catch "
+                    "specific exceptions")
+            elif "DeadLogicalNode" in _handler_names(node) and \
+                    _silent_body(node.body):
+                yield self.violation(
+                    ctx, node, "DeadLogicalNode caught and silently "
+                    "dropped; route faults through repro.resilience "
+                    "(ResilientAllreduce / SupervisedEngineLoop) or "
+                    "re-raise")
+
+
+@register
+class AtomicCheckpointRule(Rule):
+    """RA502: checkpoint payloads must be written through the atomic
+    :func:`repro.checkpoint.store.save` (tempfile + fsync +
+    ``os.replace``) — a direct ``np.savez``/``np.save`` can be killed
+    mid-write and leave a truncated artifact that the exact-resume path
+    then trips over."""
+
+    rule_id = "RA502"
+    severity = Severity.ERROR
+    title = "non-atomic checkpoint write"
+    rationale = ("kill-and-resume (repro.launch.soak) relies on every "
+                 "on-disk artifact being complete-or-absent; only "
+                 "checkpoint/store.py may call the raw numpy writers")
+    exclude = ("checkpoint/store.py",)
+
+    _WRITERS = {"save", "savez", "savez_compressed"}
+
+    def check(self, ctx: ModuleContext) -> Iterable[Violation]:
+        """Flag direct numpy array-writer calls."""
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and \
+                    fn.attr in self._WRITERS and \
+                    _base_name(fn) in _NP_MODULES:
+                yield self.violation(
+                    ctx, node, f"direct numpy '{fn.attr}' write; persist "
+                    "through repro.checkpoint.store.save for "
+                    "atomic crash-safe artifacts")

@@ -3,15 +3,36 @@
 Host-gathered (fine for the CPU/dev path; on a real pod this would stream
 per-shard with a distributed filesystem — the serialization format and
 pytree flattening here are the reusable parts).
+
+Crash safety: :func:`save` is **atomic** — the payload is written to a
+tempfile in the target directory, fsynced, then ``os.replace``d over the
+final name, so a kill mid-save can never leave a corrupt or partial
+checkpoint behind (the previous complete artifact, if any, survives).
+The ``.npz`` is replaced *before* its ``.meta.json`` sidecar, so a
+visible meta always describes a complete payload (the autotuner's
+``PlanCache`` relies on exactly this ordering).  Artifacts damaged by
+other means (disk truncation, partial copies) surface as a
+:class:`CheckpointError` from the loaders rather than a cryptic zipfile
+traceback — the exact-resume soak harness (``repro.launch.soak``) uses
+that to skip a bad checkpoint and fall back to an older one.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint artifact exists but cannot be decoded (truncated,
+    corrupt, or not a :func:`save` product).  Distinct from
+    ``FileNotFoundError`` — the caller can fall back to an older
+    checkpoint (``repro.launch.soak`` does) instead of crashing on
+    garbage."""
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -27,13 +48,40 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
     return out
 
 
+def _atomic_write(final_path: str, write_fn) -> None:
+    """Write via tempfile-in-target-dir + fsync + ``os.replace``."""
+    d = os.path.dirname(final_path) or "."
+    fd, tmp = tempfile.mkstemp(
+        dir=d, prefix=os.path.basename(final_path) + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final_path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save(path: str, tree: Any, meta: Dict[str, Any] | None = None) -> None:
+    """Atomically persist ``tree`` (pytree of arrays) at ``path``.
+
+    Writes ``<path>.npz`` (payload) then ``<path>.meta.json`` (sidecar,
+    when ``meta`` is given), each through a fsynced tempfile +
+    ``os.replace`` in the target directory — see the module docstring for
+    the crash-safety contract.
+    """
     flat = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **flat)
+    base = path[: -len(".npz")] if path.endswith(".npz") else path
+    _atomic_write(base + ".npz", lambda f: np.savez(f, **flat))
     if meta is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(meta, f, indent=2, default=str)
+        payload = json.dumps(meta, indent=2, default=str).encode()
+        _atomic_write(base + ".meta.json", lambda f: f.write(payload))
 
 
 def load_flat(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any] | None]:
@@ -44,20 +92,39 @@ def load_flat(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any] | None]:
     meta was written).  This is the read path for consumers whose payload
     *is* a flat namespace (e.g. the autotuner's plan cache,
     ``repro.core.autotune``) rather than a pytree with a known template.
+
+    Raises ``FileNotFoundError`` when no artifact exists and
+    :class:`CheckpointError` when one exists but is corrupt/truncated.
     """
     base = path[: -len(".npz")] if path.endswith(".npz") else path
-    with np.load(base + ".npz") as data:
-        arrays = {k: data[k] for k in data.files}
+    if not os.path.exists(base + ".npz"):
+        raise FileNotFoundError(f"no checkpoint at {base}.npz")
+    try:
+        with np.load(base + ".npz") as data:
+            arrays = {k: data[k] for k in data.files}
+    except Exception as e:
+        raise CheckpointError(
+            f"corrupt or truncated checkpoint {base}.npz "
+            f"({type(e).__name__}: {e}); it is not a complete "
+            f"repro.checkpoint.store artifact") from e
     meta = None
     if os.path.exists(base + ".meta.json"):
-        with open(base + ".meta.json") as f:
-            meta = json.load(f)
+        try:
+            with open(base + ".meta.json") as f:
+                meta = json.load(f)
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            raise CheckpointError(
+                f"corrupt checkpoint sidecar {base}.meta.json "
+                f"({type(e).__name__}: {e})") from e
     return arrays, meta
 
 
 def load(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (shape/dtype checked).
+
+    Raises :class:`CheckpointError` on a corrupt artifact (see
+    :func:`load_flat`)."""
+    arrays, _ = load_flat(path)
 
     def rebuild(tree, prefix=""):
         if isinstance(tree, dict):
@@ -65,9 +132,38 @@ def load(path: str, like: Any) -> Any:
         if isinstance(tree, (tuple, list)):
             vals = [rebuild(v, f"{prefix}#{i}/") for i, v in enumerate(tree)]
             return type(tree)(vals)
-        arr = data[prefix[:-1]]
+        arr = arrays[prefix[:-1]]
         want = jax.eval_shape(lambda: tree) if callable(tree) else tree
         assert arr.shape == tuple(want.shape), \
             f"{prefix}: {arr.shape} != {want.shape}"
         return arr
     return rebuild(like)
+
+
+def list_checkpoints(directory: str, prefix: str = "ckpt-"
+                     ) -> List[Tuple[int, str]]:
+    """Step-numbered :func:`save` artifacts in ``directory``, newest first.
+
+    Matches ``<prefix><step>.npz`` with an integer ``step`` and returns
+    ``[(step, extension-less base path), ...]`` sorted descending by step.
+    Existence only — pair with :func:`load_flat`/:func:`load` and catch
+    :class:`CheckpointError` to skip damaged entries (the soak harness's
+    resume loop does)."""
+    out: List[Tuple[int, str]] = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        if not (name.startswith(prefix) and name.endswith(".npz")):
+            continue
+        stem = name[len(prefix):-len(".npz")]
+        if stem.isdigit():
+            out.append((int(stem), os.path.join(directory, name[:-4])))
+    return sorted(out, reverse=True)
+
+
+def latest_checkpoint(directory: str, prefix: str = "ckpt-"
+                      ) -> Optional[Tuple[int, str]]:
+    """Newest ``(step, base path)`` per :func:`list_checkpoints`, or
+    ``None`` when the directory holds no step-numbered checkpoints."""
+    cks = list_checkpoints(directory, prefix)
+    return cks[0] if cks else None

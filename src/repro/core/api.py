@@ -120,8 +120,9 @@ class SparseAllreduce:
         self._staging = None
         self._stage_rows = self._stage_cols = None
         self._first_alive = None
-        # how the last config() was satisfied on the device backend:
-        # None (no config yet / sim) | "fresh" | "memo" | "disk"
+        # how the last config()/reconfig_dead() was satisfied on the device
+        # backend: None (no config yet / sim) | "fresh" | "memo" | "disk"
+        # | "repair" (dead-set swap without host replanning)
         self.config_cache = None
 
     @property
@@ -240,6 +241,48 @@ class SparseAllreduce:
             autotune.memo_store(fp, (planned, self._reduce_fn, stats))
             return stats
         raise ValueError(f"unknown backend {self.backend!r}")
+
+    # ------------------------------------------------------------------
+    def reconfig_dead(self, dead: Optional[Set[int]]) -> None:
+        """Incremental repair (device backend): swap the dead set without
+        host re-planning.
+
+        The frozen routing is dead-set-invariant — only the contribution
+        weights and the first-alive read-back rows change — so this is
+        ``PlannedSparseAllreduce.with_dead`` + one retrace of the reduce
+        body, orders of magnitude cheaper than a fresh :meth:`config`
+        (``benchmarks/bench_soak.py`` measures both).  Repaired plans are
+        cached per dead set, so flip-flopping between failure sets (a
+        supervisor's retry loop) retraces each at most once.
+
+        Raises ``DeadLogicalNode`` when ``dead`` kills a whole replica
+        group, *before* any state changes — the instance stays usable with
+        its previous dead set, and the caller (``repro.resilience``) moves
+        on to replan-over-survivors.  Afterwards ``config_cache`` reads
+        ``"repair"``.
+        """
+        if self.backend != "device":
+            raise ValueError("reconfig_dead() requires backend='device'")
+        if self._planned is None:
+            raise RuntimeError("call config() before reconfig_dead()")
+        from .replication import first_alive_replicas
+        # Validation first: a lost replica group must leave `self` intact.
+        first_alive = first_alive_replicas(self.num_physical,
+                                           self.replication, dead)
+        key = frozenset(dead or ())
+        cache = getattr(self, "_repair_cache", None)
+        if cache is None:
+            cache = self._repair_cache = {}
+        hit = cache.get(key)
+        if hit is None:
+            planned = self._planned.with_dead(dead)
+            hit = (planned, planned.make_reduce_fn(self._mesh_used))
+            cache[key] = hit
+        self._planned, self._reduce_fn = hit
+        self._first_alive = first_alive
+        self.dead = set(key) or None
+        self._union_cache = {}       # union fns bake the dead set too
+        self.config_cache = "repair"
 
     # ------------------------------------------------------------------
     def reduce(self, out_values: Sequence[np.ndarray]) -> List[np.ndarray]:

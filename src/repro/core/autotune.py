@@ -362,13 +362,20 @@ def _digest(obj) -> str:
 def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
                    index_range: float, merge: str, replication: int,
                    width: int, fabric: Fabric,
-                   serial_nic: bool = True) -> dict:
+                   serial_nic: bool = True,
+                   shrunk_from: Optional[int] = None) -> dict:
     """The cache key: mesh shape, quantized nnz profile, merge mode,
     replication, value width, fabric fingerprint, NIC serialization mode,
     key-schema version.  Any field changing = a different plan file
     (invalidation is purely key-miss; nothing is ever reused across these
-    boundaries)."""
-    return {
+    boundaries).
+
+    ``shrunk_from`` marks survivor plans produced by ``repro.resilience``
+    replanning a fleet that started at that logical size — keyed
+    separately from native plans of equal size (the nnz profile carried
+    over from the original fleet differs), and only added to the key when
+    set, so every pre-existing digest is unchanged."""
+    key = {
         "kind": "plan", "version": _KEY_VERSION,
         "mesh": [[str(a), int(s)] for a, s in mesh],
         "nnz_bucket": _qlog(nnz), "range_bucket": _qlog(index_range),
@@ -377,6 +384,9 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
         "fabric": fabric.as_meta(),
         "serial_nic": bool(serial_nic),
     }
+    if shrunk_from is not None:
+        key["shrunk_from"] = int(shrunk_from)
+    return key
 
 
 def fabric_cache_key(*, backend: str, num_devices: int) -> dict:
@@ -509,7 +519,8 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
                     mesh_sig: Optional[Sequence[Tuple[str, int]]] = None,
                     cache: Optional[PlanCache] = None,
                     retune: bool = False, top_k: int = 5,
-                    confirm: Optional[Callable] = None
+                    confirm: Optional[Callable] = None,
+                    shrunk_from: Optional[int] = None
                     ) -> Tuple[Tuple[int, ...], str]:
     """Cached, calibrated degree selection — returns ``(degrees, source)``
     with ``source`` in ``{"cache", "tuned"}``.
@@ -519,6 +530,10 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
     (degrees + tune report + fabric parameters) for the next process.
     ``mesh_sig`` defaults to ``(("nodes", num_nodes),)``; pass the real
     ``(axis, size)`` layout so per-axis plans key separately.
+    ``shrunk_from`` keys survivor replans separately (see
+    :func:`plan_cache_key`) — a repeat shrink to the same survivor count
+    is then a cache hit, which is what keeps ``repro.resilience``
+    recovery cheap.
     """
     cache = cache or default_cache()
     sig = tuple(mesh_sig) if mesh_sig else (("nodes", int(num_nodes)),)
@@ -526,7 +541,8 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
         raise ValueError(f"mesh_sig {sig} does not cover {num_nodes} nodes")
     key = plan_cache_key(mesh=sig, nnz=n0, index_range=total_range,
                          merge=merge, replication=replication, width=width,
-                         fabric=fabric, serial_nic=serial_nic)
+                         fabric=fabric, serial_nic=serial_nic,
+                         shrunk_from=shrunk_from)
     if not retune:
         hit = cache.load(key)
         if hit is not None:

@@ -13,7 +13,7 @@ device backend, and the benchmarks all see byte-identical failures:
     curves r∈{1,2,3} against the §V-A generalized birthday bound, plus
     the r× message-cost overhead.
 
-Three kinds:
+Four kinds:
 
   * ``"random"``  — ``num_failures`` nodes drawn uniformly without
     replacement, fresh per step (the paper's §V-A failure model);
@@ -22,7 +22,12 @@ Three kinds:
     space by M, so rack-local blast radii rarely kill a group — the
     reason the mixed-radix replica layout places replicas far apart);
   * ``"rolling"`` — a contiguous window of ``num_failures`` ids sliding
-    deterministically with the step (rolling maintenance / upgrades).
+    deterministically with the step (rolling maintenance / upgrades);
+  * ``"cascade"`` — monotonically accumulating failures that never heal:
+    ``num_failures`` *new* nodes die each step, drawn from a single
+    seeded permutation, so ``dead_at(t)`` ⊇ ``dead_at(t-1)`` always.
+    The realistic soak-test model (churn without repair) driven by
+    ``repro.launch.soak`` and ``repro.resilience``.
 """
 from __future__ import annotations
 
@@ -34,7 +39,7 @@ import numpy as np
 
 from .replication import DeadLogicalNode, contribution_weights
 
-SCHEDULE_KINDS = ("random", "rack", "rolling")
+SCHEDULE_KINDS = ("random", "rack", "rolling", "cascade")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +62,11 @@ class FailureSchedule:
                 f"[0, {self.m_physical}]")
         if self.kind == "rack" and self.rack_size < 1:
             raise ValueError(f"rack_size must be >= 1, got {self.rack_size}")
+        if self.kind == "rack" and self.rack_size > self.m_physical:
+            raise ValueError(
+                f"impossible rack schedule: rack_size={self.rack_size} "
+                f"exceeds m_physical={self.m_physical} — one rack would "
+                f"cover the whole fleet and then some")
 
     # ------------------------------------------------------------------
     def _rng(self, step: int) -> np.random.RandomState:
@@ -86,6 +96,12 @@ class FailureSchedule:
                 if len(dead) >= f:
                     break
             return dead
+        if self.kind == "cascade":
+            # Monotone accumulation: one seed-only permutation fixes the
+            # death order; step t exposes its first (t+1)*f entries, so
+            # dead sets are nested supersets and never heal.
+            order = self._rng(0).permutation(m)
+            return set(order[: min((step + 1) * f, m)].tolist())
         # rolling: contiguous window advancing one failure-width per step
         start = (self.seed + step * f) % m
         return {(start + i) % m for i in range(f)}
@@ -146,6 +162,6 @@ def completion_probability(m_logical: int, replication: int,
         try:
             contribution_weights(m_phys, replication, dead)
             ok += 1
-        except DeadLogicalNode:
+        except DeadLogicalNode:  # noqa: RA501 — counting, not swallowing
             pass
     return ok / trials

@@ -210,6 +210,25 @@ class PlannedSparseAllreduce:
             * (user_gather >= 0)[(...,) + (None,) * (values.ndim - 1)]
 
     # ---------------------------------------------------------------------
+    def with_dead(self, dead=None) -> "PlannedSparseAllreduce":
+        """Incremental repair: the same frozen routing with a new dead set.
+
+        Only the per-device contribution weights depend on ``dead`` — the
+        gather/scatter routing tensors are dead-set-invariant (every device
+        receives the full union, paper §V) — so repairing a plan after a
+        replica-absorbed failure is a ``dataclasses.replace`` of the
+        weights, not a host replan.  The result needs one retrace (weights
+        are baked into the jitted body as constants), hence the fresh
+        ``trace_count``.  Raises ``DeadLogicalNode`` when ``dead`` kills a
+        whole replica group — callers wanting to continue must replan over
+        survivors instead (``repro.resilience``).
+        """
+        from .replication import contribution_weights
+        weights = contribution_weights(self.dplan.logical.num_nodes,
+                                       self.dplan.replication, dead)
+        return dataclasses.replace(self, weights=weights, trace_count=0)
+
+    # ---------------------------------------------------------------------
     def make_reduce_fn(self, mesh: jax.sharding.Mesh):
         """Jitted host entry: values [M, u_cap(,W)] -> [M, uin_cap(,W)]."""
         from jax.sharding import PartitionSpec as P

@@ -83,6 +83,35 @@ def first_alive_replicas(m_physical: int, replication: int,
     return out
 
 
+def lost_logical_shards(m_physical: int, replication: int,
+                        dead: Optional[Set[int]] = None) -> List[int]:
+    """Logical shard ids whose replica group is *entirely* dead.
+
+    The non-raising sibling of :func:`contribution_weights`: where that
+    function raises :class:`DeadLogicalNode` at the first lost group, this
+    enumerates them all so a supervisor (``repro.resilience``) can decide
+    between absorb / replan / fail.  Out-of-range dead ids still raise
+    ``ValueError`` — a typo'd failure injection must not read as healthy.
+    """
+    dead = set(dead or ())
+    bad = dead - set(range(m_physical))
+    if bad:
+        raise ValueError(
+            f"dead ids {sorted(bad)} outside [0, {m_physical}) — failure "
+            f"injection would silently be a no-op")
+    return [i for i, group in
+            enumerate(replica_groups(m_physical, replication))
+            if all(d in dead for d in group)]
+
+
+def surviving_logical_shards(m_physical: int, replication: int,
+                             dead: Optional[Set[int]] = None) -> List[int]:
+    """Logical shard ids with at least one alive replica (complement of
+    :func:`lost_logical_shards`, same validation)."""
+    lost = set(lost_logical_shards(m_physical, replication, dead))
+    return [i for i in range(m_physical // replication) if i not in lost]
+
+
 def expected_tolerated_failures(m_logical: int, replication: int = 2) -> float:
     """Generalized birthday estimate of the expected number of random
     physical failures before some replica group is fully dead.

@@ -167,11 +167,16 @@ class GraphEngine:
                  retune: bool = False):
         self.app = app
         self.num_nodes = len(out_sets)
+        self.out_sets = [np.asarray(o, np.uint32) for o in out_sets]
+        self.in_sets = [np.asarray(i, np.uint32) for i in in_sets]
+        self.seed = seed
+        self.fabric = fabric
+        self.plan_cache_arg = plan_cache
         self.ar = SparseAllreduce(self.num_nodes, degrees, backend="device",
                                   mesh=mesh, seed=seed, fabric=fabric,
                                   value_width=app.value_width,
                                   plan_cache=plan_cache, retune=retune)
-        self.config_stats = self.ar.config(out_sets, in_sets)
+        self.config_stats = self.ar.config(self.out_sets, self.in_sets)
         self.config_cache = self.ar.config_cache
         self.planned, self.mesh = self.ar.planned_parts()
         meta = self.ar.staging_metadata()
@@ -183,6 +188,25 @@ class GraphEngine:
         self._routing = tuple(self.planned.device_args())
         self._run_cache: Dict[Tuple[int, str], Callable] = {}
         self.report = {"dispatches": 0, "rounds": 0, "step_traces": 0}
+
+    # ---------------------------------------------------------------------
+    def remesh(self, mesh) -> "GraphEngine":
+        """The same engine program on a different device set.
+
+        The recovery move for whole-device loss when spare devices exist
+        (``repro.resilience.engine``): the partition, index pattern,
+        *resolved* degrees, and seed carry over unchanged, so the rebuilt
+        plan's routing — and therefore every reduce result — is
+        bit-identical to this engine's; only the mesh binding differs.
+        Plan configs are memo-keyed on the mesh's device ids
+        (``repro.core.autotune``), so remapping back to a previously used
+        device set is a zero-retrace memo hit.  ``mesh`` must span
+        ``num_nodes`` devices.
+        """
+        return GraphEngine(self.out_sets, self.in_sets, self.app,
+                           degrees=self.ar.plan.degrees, mesh=mesh,
+                           seed=self.seed, fabric=self.fabric,
+                           plan_cache=self.plan_cache_arg, retune=False)
 
     # -- static per-reduce sync structure ---------------------------------
     def sync_report(self) -> dict:

@@ -127,6 +127,37 @@ def pagerank(edges: np.ndarray, n_vertices: int, m: int,
     return scores, stats
 
 
+def make_pagerank_app(parts: List[Partition], n_vertices: int,
+                      damping: float = 0.85, use_kernel: bool = False):
+    """The engine-agnostic PageRank pieces: ``(app, out_sets, in_sets)``.
+
+    Shared by :func:`make_pagerank_engine` and the supervised loop
+    (``repro.resilience.engine.SupervisedEngineLoop``), which owns its own
+    engine construction / remapping and only needs the per-round app."""
+    from . import engine as eng
+    app = eng.EngineApp(
+        name="pagerank",
+        out_fn=lambda s, e: eng.ell_matvec(e["cols"], e["wts"], s,
+                                           use_kernel=use_kernel),
+        update_fn=lambda s, in_raw, e, ax:
+            (1.0 - damping) / n_vertices + damping * in_raw)
+    return (app,
+            [p.out_idx.astype(np.uint32) for p in parts],
+            [p.in_idx.astype(np.uint32) for p in parts])
+
+
+def pagerank_state(parts: List[Partition], n_vertices: int,
+                   u_cap: int, uin_cap: int):
+    """Stacked ELL extras + the uniform initial state for a PageRank run
+    over ``parts``, sized to an engine's frozen ``u_cap`` / ``uin_cap``."""
+    from . import engine as eng
+    cols, wts = eng.stack_ell([p.ell_tables() for p in parts], u_cap)
+    p0 = np.zeros((len(parts), uin_cap), np.float32)
+    for i, p in enumerate(parts):
+        p0[i, : len(p.in_idx)] = 1.0 / n_vertices
+    return {"cols": cols, "wts": wts}, p0
+
+
 def make_pagerank_engine(parts: List[Partition], n_vertices: int,
                          degrees=(4, 2), damping: float = 0.85,
                          use_kernel: bool = False, seed: int = 0,
@@ -136,22 +167,13 @@ def make_pagerank_engine(parts: List[Partition], n_vertices: int,
     ``engine.run(k, p0, extras)`` needs.  Shared by
     ``pagerank(backend="device")`` and the fig8/fig9 benchmarks."""
     from . import engine as eng
-    m = len(parts)
-    app = eng.EngineApp(
-        name="pagerank",
-        out_fn=lambda s, e: eng.ell_matvec(e["cols"], e["wts"], s,
-                                           use_kernel=use_kernel),
-        update_fn=lambda s, in_raw, e, ax:
-            (1.0 - damping) / n_vertices + damping * in_raw)
-    engine = eng.GraphEngine(
-        [p.out_idx.astype(np.uint32) for p in parts],
-        [p.in_idx.astype(np.uint32) for p in parts],
-        app, degrees=degrees, mesh=mesh, seed=seed, fabric=fabric)
-    cols, wts = eng.stack_ell([p.ell_tables() for p in parts], engine.u_cap)
-    p0 = np.zeros((m, engine.uin_cap), np.float32)
-    for i, p in enumerate(parts):
-        p0[i, : len(p.in_idx)] = 1.0 / n_vertices
-    return engine, {"cols": cols, "wts": wts}, p0
+    app, out_sets, in_sets = make_pagerank_app(parts, n_vertices, damping,
+                                               use_kernel)
+    engine = eng.GraphEngine(out_sets, in_sets, app, degrees=degrees,
+                             mesh=mesh, seed=seed, fabric=fabric)
+    extras, p0 = pagerank_state(parts, n_vertices, engine.u_cap,
+                                engine.uin_cap)
+    return engine, extras, p0
 
 
 def assemble_pagerank_scores(parts: List[Partition], last_q: np.ndarray,

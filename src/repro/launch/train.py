@@ -35,6 +35,30 @@ from repro.optim.adamw import AdamW
 from repro.train.step import make_train_step, mesh_ctx
 
 
+def batch_stream(cfg, batch: int, seq: int, seed: int = 0):
+    """The launcher's deterministic synthetic batch source, as a reusable
+    generator of numpy batch dicts (tokens / labels + per-arch extras).
+
+    Exactly the sequence :func:`main` consumes: a seeded Zipf
+    :class:`Batcher` plus one sequential ``RandomState(seed)`` for the
+    multimodal tensors — so two streams with equal ``(cfg, batch, seq,
+    seed)`` are byte-identical, and *exact resume* is "recreate the stream
+    and skip the first k batches" (``repro.launch.soak`` relies on this
+    for step-identical resumed trajectories)."""
+    batcher = iter(Batcher(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed))
+    rng = np.random.RandomState(seed)
+    while True:
+        toks, labels = next(batcher)
+        b = {"tokens": toks, "labels": labels}
+        if cfg.img_tokens:
+            b["img_embeds"] = rng.randn(
+                batch, cfg.img_tokens, cfg.d_model).astype(np.float32)
+        if cfg.enc_layers:
+            b["enc_frames"] = rng.randn(
+                batch, cfg.enc_seq, cfg.d_model).astype(np.float32)
+        yield b
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCHS))
@@ -123,21 +147,12 @@ def main(argv=None):
                               retune=args.retune)
     params = T.init_params(cfg, mc.tp, seed=args.seed)
     opt_state = AdamW().init(params)
-    batcher = iter(Batcher(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
-                           seed=args.seed))
+    stream = batch_stream(cfg, args.batch, args.seq, seed=args.seed)
 
     t_start = time.time()
-    rng = np.random.RandomState(args.seed)
     r = args.replication
     for i in range(args.steps):
-        toks, labels = next(batcher)
-        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
-        if cfg.img_tokens:
-            batch["img_embeds"] = jnp.asarray(
-                rng.randn(args.batch, cfg.img_tokens, cfg.d_model), jnp.float32)
-        if cfg.enc_layers:
-            batch["enc_frames"] = jnp.asarray(
-                rng.randn(args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
         if r > 1:
             # mirror the logical batch onto every replica slab: device
             # i + j*(data/r) sees logical shard i's rows for all j

@@ -1,0 +1,21 @@
+"""Supervision layer: fatal faults -> degraded-but-correct continuation.
+
+Three pieces (see ARCHITECTURE.md "Resilience"):
+
+  * :mod:`repro.resilience.events` — fault classification
+    (replica-absorbed / group-lost / quorum-lost) shared by every
+    detection path;
+  * :mod:`repro.resilience.supervisor` — :class:`ResilientAllreduce`,
+    the supervised two-call reduce with retry/backoff and
+    replan-over-survivors;
+  * :mod:`repro.resilience.engine` — :class:`SupervisedEngineLoop`,
+    blocked+checkpointed ``GraphEngine`` runs with device remapping.
+
+The exact-resume soak harness driving all of it end to end is
+``repro.launch.soak``.
+"""
+from .events import (FaultEvent, QuorumLost, classify,  # noqa: F401
+                     GROUP_LOST, NO_FAULT, QUORUM_LOST, REPLICA_ABSORBED)
+from .supervisor import (DegradedPolicy, ReduceOutcome,  # noqa: F401
+                         ResilientAllreduce, retry_until_alive)
+from .engine import SupervisedEngineLoop  # noqa: F401

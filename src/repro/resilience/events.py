@@ -1,0 +1,87 @@
+"""Fault-event taxonomy for the supervision layer.
+
+Every failure the supervisor (:mod:`repro.resilience.supervisor`) sees is
+classified into exactly one of three severities, keyed off the paper's §V
+replica layout (:func:`repro.core.replication.replica_groups`):
+
+  * **replica-absorbed** — some physical nodes are dead but every replica
+    group keeps at least one alive member.  The reduce completes with
+    *unchanged* results after an incremental weight repair
+    (``SparseAllreduce.reconfig_dead``) — the paper's designed-for case.
+  * **group-lost** — at least one replica group is entirely dead.  The
+    fault-free plan cannot complete (``DeadLogicalNode``); the supervisor
+    replans over the surviving logical shards (degraded but correct).
+  * **quorum-lost** — so many groups are gone that fewer than
+    ``quorum_frac`` of the logical shards survive.  Continuing would be
+    statistically meaningless; the supervisor fails fast with
+    :class:`QuorumLost`.
+
+``classify`` is pure and host-side — the supervisor calls it both before
+dispatch (schedule consultation) and inside the ``DeadLogicalNode``
+handler, so both paths agree on severity by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import FrozenSet, Optional, Set, Tuple
+
+from repro.core.replication import (DeadLogicalNode, lost_logical_shards,
+                                    surviving_logical_shards)
+
+#: Severity labels, mildest first.
+NO_FAULT = "none"
+REPLICA_ABSORBED = "replica-absorbed"
+GROUP_LOST = "group-lost"
+QUORUM_LOST = "quorum-lost"
+
+
+class QuorumLost(DeadLogicalNode):
+    """Too few logical shards survive to continue degraded — the
+    supervisor's fail-fast terminal state.  Subclasses
+    :class:`DeadLogicalNode` so unsupervised callers that already handle
+    dead groups keep working."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One classified observation of a dead set (supervisor audit trail).
+
+    ``lost`` / ``survivors`` are logical shard ids; ``dead`` is physical.
+    ``attempt`` counts retries within one reduce (0 = first try).
+    """
+
+    step: int
+    attempt: int
+    dead: FrozenSet[int]
+    klass: str
+    lost: Tuple[int, ...]
+    survivors: Tuple[int, ...]
+
+
+def classify(m_physical: int, replication: int,
+             dead: Optional[Set[int]] = None, *,
+             quorum_frac: float = 0.5,
+             step: int = 0, attempt: int = 0) -> FaultEvent:
+    """Classify a dead physical-node set into a :class:`FaultEvent`.
+
+    Quorum rule: the run continues degraded while at least
+    ``max(1, ceil(quorum_frac * m_logical))`` logical shards survive;
+    below that the event is :data:`QUORUM_LOST`.  Raises ``ValueError``
+    for out-of-range dead ids (same contract as
+    :func:`repro.core.replication.contribution_weights`).
+    """
+    dead = set(dead or ())
+    lost = tuple(lost_logical_shards(m_physical, replication, dead))
+    survivors = tuple(surviving_logical_shards(m_physical, replication, dead))
+    m_logical = m_physical // replication
+    if not dead:
+        klass = NO_FAULT
+    elif not lost:
+        klass = REPLICA_ABSORBED
+    elif len(survivors) < max(1, math.ceil(quorum_frac * m_logical)):
+        klass = QUORUM_LOST
+    else:
+        klass = GROUP_LOST
+    return FaultEvent(step=step, attempt=attempt, dead=frozenset(dead),
+                      klass=klass, lost=lost, survivors=survivors)

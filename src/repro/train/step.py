@@ -298,6 +298,23 @@ def init_cache_global(cfg: ModelConfig, mc: MeshCtx, b: int, max_seq: int,
 # Train step
 # ---------------------------------------------------------------------------
 
+def train_fingerprint(cfg: ModelConfig, **settings) -> str:
+    """Digest of everything that must match for a checkpoint to resume
+    *exactly*: the model config plus caller-provided run settings (batch,
+    seq, seed, sync mode, ...).  Stored in checkpoint meta by
+    ``repro.launch.soak`` and compared on resume — a mismatch means the
+    resumed trajectory could silently diverge from the original run, so
+    the harness refuses it rather than producing not-quite-identical
+    steps."""
+    import hashlib
+    import json
+    payload = {"cfg": dataclasses.asdict(cfg),
+               "settings": {k: settings[k] for k in sorted(settings)}}
+    return hashlib.sha1(
+        json.dumps(payload, sort_keys=True, default=str).encode()
+    ).hexdigest()[:16]
+
+
 def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     opt: Optional[AdamW] = None,
                     dp_degrees=None,

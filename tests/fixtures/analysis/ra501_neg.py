@@ -1,0 +1,34 @@
+"""Fixture: RA501 negative — legitimate fault handling: re-raise,
+route to the supervisor, or genuinely handle; specific non-fault
+exceptions may pass."""
+from repro.core.replication import DeadLogicalNode
+
+
+def reraise(ar, values):
+    try:
+        return ar.reduce(values)
+    except DeadLogicalNode:
+        raise
+
+
+def route_to_supervisor(ar, values, supervisor):
+    try:
+        return ar.reduce(values)
+    except DeadLogicalNode as e:
+        return supervisor.replan_and_retry(e, values)
+
+
+def count_faults(ar, values, stats):
+    try:
+        return ar.reduce(values)
+    except DeadLogicalNode:
+        stats["faults"] += 1
+        raise
+
+
+def unrelated_pass_is_fine(path):
+    import os
+    try:
+        os.remove(path)
+    except FileNotFoundError:
+        pass

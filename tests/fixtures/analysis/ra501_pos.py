@@ -1,0 +1,32 @@
+"""Fixture: RA501 positive — faults swallowed outside the resilience
+layer (bare excepts and pass-only DeadLogicalNode handlers)."""
+from repro.core.replication import DeadLogicalNode
+
+
+def lossy_reduce(ar, values):
+    try:
+        return ar.reduce(values)
+    except:  # expect: RA501
+        return values
+
+
+def ignore_dead(ar, values):
+    try:
+        return ar.reduce(values)
+    except DeadLogicalNode:  # expect: RA501
+        pass
+
+
+def ignore_dead_dotted(ar, values, replication):
+    try:
+        return ar.reduce(values)
+    except replication.DeadLogicalNode:  # expect: RA501
+        ...
+
+
+def ignore_dead_in_tuple(ar, values):
+    for v in values:
+        try:
+            ar.reduce(v)
+        except (ValueError, DeadLogicalNode):  # expect: RA501
+            continue

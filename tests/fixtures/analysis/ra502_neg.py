@@ -1,0 +1,18 @@
+"""Fixture: RA502 negative — persistence through the atomic store (and
+numpy *readers*, which are unaffected)."""
+import numpy as np
+
+from repro.checkpoint import store
+
+
+def checkpoint(path, params, step):
+    store.save(path, {"params": params}, meta={"step": step})
+
+
+def restore(path, like):
+    return store.load(path, like)
+
+
+def read_side_is_fine(path):
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}

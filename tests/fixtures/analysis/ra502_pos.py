@@ -1,0 +1,12 @@
+"""Fixture: RA502 positive — raw numpy array writers used for
+checkpoint-style persistence (killable mid-write, non-atomic)."""
+import numpy as np
+
+
+def save_state(path, params, opt):
+    np.savez(path, **params)  # expect: RA502
+    np.savez_compressed(path + ".z", **opt)  # expect: RA502
+
+
+def save_single(path, arr):
+    np.save(path, arr)  # expect: RA502

@@ -1,0 +1,12 @@
+"""Fixture: RA501 negative — this fixture path maps into the
+``resilience/`` scope, where absorbing DeadLogicalNode is the whole
+point (the supervisor catches it to classify and replan)."""
+from repro.core.replication import DeadLogicalNode
+
+
+def probe_is_dead(ar, values):
+    try:
+        ar.reduce(values)
+    except DeadLogicalNode:
+        pass
+    return True

@@ -142,7 +142,10 @@ def test_schedule_deterministic_and_sized(kind):
     for t in range(6):
         da, db = a.dead_at(t), b.dead_at(t)
         assert da == db
-        assert len(da) == 7 and all(0 <= d < 24 for d in da)
+        # cascade accumulates f *new* failures per step (capped at m);
+        # every other kind has exactly f dead per step
+        want = min(7 * (t + 1), 24) if kind == "cascade" else 7
+        assert len(da) == want and all(0 <= d < 24 for d in da)
     assert list(a.steps(3)) == [a.dead_at(0), a.dead_at(1), a.dead_at(2)]
     assert make_schedule(kind, 24, 0).dead_at(3) == set()
     # different seeds / steps decorrelate (deterministically checkable)

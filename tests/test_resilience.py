@@ -1,0 +1,560 @@
+"""Resilience layer (PR 7): atomic checkpoints, fault classification,
+retry/backoff, replan-over-survivors parity, engine remapping, and the
+exact-resume soak harness (subprocess: 16 forced host devices)."""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store
+from repro.core.faults import FailureSchedule, make_schedule
+from repro.core.replication import (expected_tolerated_failures,
+                                    lost_logical_shards, replica_groups,
+                                    surviving_logical_shards)
+from repro.resilience import (GROUP_LOST, NO_FAULT, QUORUM_LOST,
+                              REPLICA_ABSORBED, DegradedPolicy, classify,
+                              retry_until_alive)
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=16",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src")
+            + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# atomic checkpoint store
+# ---------------------------------------------------------------------------
+
+def test_save_then_load_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones(4, np.int32)}}
+    base = str(tmp_path / "ckpt-1")
+    store.save(base, tree, meta={"step": 1})
+    arrays, meta = store.load_flat(base)
+    assert meta == {"step": 1}
+    np.testing.assert_array_equal(arrays["a"], tree["a"])
+    np.testing.assert_array_equal(arrays["b/c"], tree["b"]["c"])
+
+
+def test_save_leaves_no_tempfiles(tmp_path):
+    store.save(str(tmp_path / "ckpt-2"), {"x": np.zeros(3)},
+               meta={"step": 2})
+    leftovers = [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    assert not leftovers
+    assert sorted(os.listdir(tmp_path)) == ["ckpt-2.meta.json", "ckpt-2.npz"]
+
+
+def test_truncated_checkpoint_raises_checkpoint_error(tmp_path):
+    """Crash-mid-save emulation: a truncated .npz surfaces as a clear
+    CheckpointError, not a cryptic zipfile traceback."""
+    base = str(tmp_path / "ckpt-3")
+    store.save(base, {"x": np.arange(1000, dtype=np.float64)})
+    with open(base + ".npz", "r+b") as f:
+        f.truncate(os.path.getsize(base + ".npz") // 2)
+    with pytest.raises(store.CheckpointError, match="corrupt or truncated"):
+        store.load_flat(base)
+    with pytest.raises(store.CheckpointError):
+        store.load(base, {"x": np.zeros(1000)})
+
+
+def test_missing_checkpoint_raises_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        store.load_flat(str(tmp_path / "nope"))
+
+
+def test_corrupt_sidecar_raises_checkpoint_error(tmp_path):
+    base = str(tmp_path / "ckpt-4")
+    store.save(base, {"x": np.zeros(2)}, meta={"step": 4})
+    with open(base + ".meta.json", "w") as f:
+        f.write('{"step": 4')          # truncated json
+    with pytest.raises(store.CheckpointError, match="sidecar"):
+        store.load_flat(base)
+
+
+def test_crash_mid_save_preserves_previous_artifact(tmp_path, monkeypatch):
+    """A writer dying mid-save must leave the previous complete
+    checkpoint untouched and no visible partial file."""
+    base = str(tmp_path / "ckpt-5")
+    store.save(base, {"x": np.full(8, 1.0)}, meta={"v": 1})
+
+    def boom(f, **kw):
+        f.write(b"partial garbage")
+        raise RuntimeError("disk died")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(RuntimeError, match="disk died"):
+        store.save(base, {"x": np.full(8, 2.0)}, meta={"v": 2})
+    monkeypatch.undo()
+    arrays, meta = store.load_flat(base)
+    np.testing.assert_array_equal(arrays["x"], np.full(8, 1.0))
+    assert meta == {"v": 1}
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+
+
+def test_list_and_latest_checkpoints(tmp_path):
+    for step in (2, 10, 6):
+        store.save(str(tmp_path / f"ckpt-{step}"), {"x": np.zeros(1)})
+    store.save(str(tmp_path / "final"), {"x": np.zeros(1)})
+    (tmp_path / "ckpt-bogus.npz").write_bytes(b"junk")
+    got = store.list_checkpoints(str(tmp_path))
+    assert [s for s, _ in got] == [10, 6, 2]
+    step, base = store.latest_checkpoint(str(tmp_path))
+    assert step == 10 and base.endswith("ckpt-10")
+    assert store.latest_checkpoint(str(tmp_path / "empty")) is None
+
+
+def test_soak_resume_skips_corrupt_latest(tmp_path):
+    """The harness's resume scan falls back past a damaged newest
+    checkpoint to the newest loadable one."""
+    from repro.launch.soak import _latest_valid
+    store.save(str(tmp_path / "ckpt-2"), {"x": np.full(3, 2.0)},
+               meta={"step": 2})
+    store.save(str(tmp_path / "ckpt-4"), {"x": np.full(3, 4.0)},
+               meta={"step": 4})
+    with open(tmp_path / "ckpt-4.npz", "r+b") as f:
+        f.truncate(10)
+    step, arrays, meta = _latest_valid(str(tmp_path))
+    assert step == 2 and meta["step"] == 2
+    np.testing.assert_array_equal(arrays["x"], np.full(3, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# cascade schedules + rack validation
+# ---------------------------------------------------------------------------
+
+def test_cascade_accumulates_and_never_heals():
+    s = make_schedule("cascade", 32, 5, seed=3)
+    prev = set()
+    for t in range(10):
+        dead = s.dead_at(t)
+        assert prev <= dead, f"cascade healed at step {t}"
+        assert len(dead) == min(5 * (t + 1), 32)
+        prev = dead
+    assert s.dead_at(4) == s.dead_at(4)   # deterministic
+
+
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_cascade_monotone_property(m, f, seed):
+    s = FailureSchedule(kind="cascade", m_physical=m,
+                        num_failures=min(f, m), seed=seed)
+    steps = [s.dead_at(t) for t in range(8)]
+    for a, b in zip(steps, steps[1:]):
+        assert a <= b
+    assert steps[-1] == s.dead_at(7)
+
+
+def test_impossible_rack_schedule_raises_at_construction():
+    with pytest.raises(ValueError, match="impossible rack schedule"):
+        FailureSchedule(kind="rack", m_physical=8, num_failures=2,
+                        rack_size=9)
+    # partial tail racks stay legal (rack 4 over 10 devices)
+    FailureSchedule(kind="rack", m_physical=10, num_failures=4, rack_size=4)
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+def test_classify_severities():
+    ev = classify(8, 2, None)
+    assert ev.klass == NO_FAULT and ev.survivors == (0, 1, 2, 3)
+    ev = classify(8, 2, {5})                       # shard 1 keeps replica 1
+    assert ev.klass == REPLICA_ABSORBED and ev.lost == ()
+    ev = classify(8, 2, {1, 5})                    # shard 1's group gone
+    assert ev.klass == GROUP_LOST
+    assert ev.lost == (1,) and ev.survivors == (0, 2, 3)
+    ev = classify(8, 2, {0, 4, 1, 5, 2, 6})        # 1 of 4 shards left
+    assert ev.klass == QUORUM_LOST
+    with pytest.raises(ValueError):
+        classify(8, 2, {8})
+
+
+def test_classify_quorum_frac_is_configurable():
+    dead = {1, 5, 2, 6}                            # 2 of 4 shards left
+    assert classify(8, 2, dead, quorum_frac=0.5).klass == GROUP_LOST
+    assert classify(8, 2, dead, quorum_frac=0.75).klass == QUORUM_LOST
+
+
+@given(st.integers(1, 10), st.integers(1, 3), st.integers(0, 10_000),
+       st.floats(0.0, 1.0))
+@settings(max_examples=80, deadline=None)
+def test_classify_matches_bruteforce_groups(m_logical, r, seed, frac):
+    """classify's lost/survivor split agrees with a brute-force scan of
+    the §V replica layout for every (M, r, dead)."""
+    m_phys = m_logical * r
+    rng = np.random.RandomState(seed)
+    k = int(round(frac * m_phys))
+    dead = set(rng.choice(m_phys, size=k, replace=False).tolist())
+    groups = replica_groups(m_phys, r)
+    lost_bf = tuple(i for i, g in enumerate(groups)
+                    if all(d in dead for d in g))
+    ev = classify(m_phys, r, dead)
+    assert ev.lost == lost_bf
+    assert ev.survivors == tuple(i for i in range(m_logical)
+                                 if i not in lost_bf)
+    assert tuple(lost_logical_shards(m_phys, r, dead)) == lost_bf
+    assert tuple(surviving_logical_shards(m_phys, r, dead)) == ev.survivors
+    if not dead:
+        assert ev.klass == NO_FAULT
+    elif not lost_bf:
+        assert ev.klass == REPLICA_ABSORBED
+    elif len(ev.survivors) < max(1, math.ceil(0.5 * m_logical)):
+        assert ev.klass == QUORUM_LOST
+    else:
+        assert ev.klass == GROUP_LOST
+
+
+def test_tolerated_failures_bound_survives_shrink():
+    """Satellite (c): the §V birthday bound is monotone in M, so a
+    shrunken (M', r) fleet never promises more tolerated failures than
+    the original (M, r) fleet did."""
+    for r in (1, 2, 3):
+        for m2, m in ((1, 4), (2, 4), (3, 4), (4, 8), (6, 8)):
+            assert expected_tolerated_failures(m2, r) <= \
+                expected_tolerated_failures(m, r) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff + policy validation
+# ---------------------------------------------------------------------------
+
+def test_retry_backoff_heals_transient_fault():
+    """Probe sees a lost group on attempts 0-1, healed (absorbed) on 2:
+    two exponential-backoff sleeps, final event is the healed one."""
+    seen = [{1, 5}, {1, 5}, {5}]
+    sleeps = []
+    pol = DegradedPolicy(max_retries=3, backoff_s=0.05, backoff_mult=2.0)
+    ev, evs = retry_until_alive(lambda a: seen[a], pol, 8, 2,
+                                sleep=sleeps.append)
+    assert ev.klass == REPLICA_ABSORBED and ev.attempt == 2
+    assert [e.klass for e in evs] == [GROUP_LOST, GROUP_LOST,
+                                      REPLICA_ABSORBED]
+    assert sleeps == [0.05, 0.1]
+
+
+def test_retry_exhaustion_returns_last_group_lost():
+    sleeps = []
+    pol = DegradedPolicy(max_retries=3, backoff_s=0.05, backoff_mult=2.0)
+    ev, evs = retry_until_alive(lambda a: {1, 5}, pol, 8, 2,
+                                sleep=sleeps.append)
+    assert ev.klass == GROUP_LOST and ev.attempt == 3
+    assert len(evs) == 4
+    assert sleeps == [0.05, 0.1, 0.2]      # no sleep after the last probe
+
+
+def test_retry_zero_retries_probes_once():
+    ev, evs = retry_until_alive(lambda a: {1, 5},
+                                DegradedPolicy(max_retries=0), 8, 2,
+                                sleep=lambda s: pytest.fail("slept"))
+    assert ev.klass == GROUP_LOST and len(evs) == 1
+
+
+@pytest.mark.parametrize("kw", [{"mode": "limp"}, {"max_retries": -1},
+                                {"backoff_s": -0.1}, {"backoff_mult": 0.5},
+                                {"quorum_frac": 0.0},
+                                {"quorum_frac": 1.5}])
+def test_degraded_policy_validation(kw):
+    with pytest.raises(ValueError):
+        DegradedPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# replan-over-survivors == fresh reduce over survivors (subprocess sweep)
+# ---------------------------------------------------------------------------
+
+_PARITY_SWEEP = r"""
+import numpy as np, jax
+from repro.core.api import SparseAllreduce
+from repro.resilience import ResilientAllreduce, DegradedPolicy
+
+rng = np.random.RandomState(7)
+RANGE = 300
+
+def dyadic(n):
+    return (rng.randint(-128, 129, n) / 64.0).astype(np.float32)
+
+def make_sets(m):
+    outs = [np.sort(rng.choice(RANGE, 40, replace=False)).astype(np.uint32)
+            for _ in range(m)]
+    ins = [np.sort(rng.choice(RANGE, 40, replace=False)).astype(np.uint32)
+           for _ in range(m)]
+    return outs, ins, [dyadic(len(o)) for o in outs]
+
+# planned-path parity: degrees x replication (kill shard 1's group);
+# M = prod(degrees), so (4,2) exercises an 8-shard fleet
+for degrees in [(4,), (2, 2), (4, 2)]:
+    M = int(np.prod(degrees))
+    for r in (1, 2):
+        outs, ins, vals = make_sets(M)
+        dead = {1} if r == 1 else {1, 1 + M}
+        ra = ResilientAllreduce(M, degrees, replication=r, dead=dead,
+                                policy=DegradedPolicy(max_retries=0),
+                                seed=0, expected_nnz=40, index_range=RANGE)
+        ra.config(outs, ins)
+        out = ra.reduce(vals)
+        assert out.degraded and out.event.klass == "group-lost"
+        surv = out.event.survivors
+        assert surv == tuple(i for i in range(M) if i != 1)
+        sh = ra.last_shrink
+        m2, r2 = len(surv), sh["replication"]
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[: m2 * r2]),
+                                 ("nodes",))
+        fresh = SparseAllreduce(m2, sh["degrees"], backend="device",
+                                replication=r2, seed=0, mesh=mesh,
+                                expected_nnz=40, index_range=RANGE)
+        fresh.config([outs[i] for i in surv], [ins[i] for i in surv])
+        want = fresh.reduce([vals[i] for i in surv])
+        for k, sid in enumerate(surv):
+            assert np.array_equal(np.asarray(out.values[sid]),
+                                  np.asarray(want[k])), (degrees, r, sid)
+        print(f"PLANNED_OK degrees={degrees} r={r} "
+              f"shrunk_degrees={sh['degrees']} r2={r2}")
+
+# union-path parity: merge modes x replication
+CAP, M = 24, 4
+idx = np.stack([np.sort(rng.choice(RANGE, CAP, replace=False))
+                for _ in range(M)]).astype(np.uint32)
+uval = np.stack([dyadic(CAP) for _ in range(M)])
+for merge in ("sort", "fused", "banded"):
+    for r in (1, 2):
+        dead = {2} if r == 1 else {2, 2 + M}
+        ra = ResilientAllreduce(M, (2, 2), replication=r, dead=dead,
+                                policy=DegradedPolicy(max_retries=0),
+                                seed=0, merge=merge,
+                                expected_nnz=CAP, index_range=RANGE)
+        out = ra.union_reduce(idx, uval, 4 * CAP)
+        assert out.degraded
+        surv = out.event.survivors
+        assert surv == (0, 1, 3)
+        sh = ra.last_shrink
+        m2, r2 = len(surv), sh["replication"]
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[: m2 * r2]),
+                                 ("nodes",))
+        fresh = SparseAllreduce(m2, sh["degrees"], backend="device",
+                                replication=r2, seed=0, merge=merge, mesh=mesh,
+                                expected_nnz=CAP, index_range=RANGE)
+        oi, ov, ovf = fresh.union_reduce(idx[list(surv)], uval[list(surv)],
+                                         4 * CAP)
+        for k, sid in enumerate(surv):
+            gi, gv, gf = out.values[sid]
+            assert np.array_equal(gi, np.asarray(oi[k])), (merge, r, sid)
+            assert np.array_equal(gv, np.asarray(ov[k])), (merge, r, sid)
+            assert int(gf) == int(ovf[k])
+        print(f"UNION_OK merge={merge} r={r}")
+print("SWEEP_DONE")
+"""
+
+
+def test_replan_equals_fresh_reduce_over_survivors():
+    """Tentpole acceptance: for every (degrees, r) and every merge mode,
+    the supervisor's replan-over-survivors output is bit-for-bit equal to
+    a fresh fault-free reduce configured over the same surviving set."""
+    out = _run(_PARITY_SWEEP)
+    assert out.count("PLANNED_OK") == 6
+    assert out.count("UNION_OK") == 6
+    assert "SWEEP_DONE" in out
+
+
+_ABSORBED_AND_LIFECYCLE = r"""
+import numpy as np
+from repro.core.replication import DeadLogicalNode
+from repro.resilience import (DegradedPolicy, QuorumLost,
+                              ResilientAllreduce)
+
+rng = np.random.RandomState(11)
+M, RANGE = 4, 200
+outs = [np.sort(rng.choice(RANGE, 30, replace=False)).astype(np.uint32)
+        for _ in range(M)]
+ins = [np.sort(rng.choice(RANGE, 30, replace=False)).astype(np.uint32)
+       for _ in range(M)]
+vals = [(rng.randint(-128, 129, len(o)) / 64.0).astype(np.float32)
+        for o in outs]
+
+# absorbed faults repair incrementally and change nothing
+deads = [None, {5}, {5, 6}, {5}]      # flip-flop: repeat -> repair cache
+ra = ResilientAllreduce(M, (2, 2), replication=2,
+                        probe=lambda s, a: deads[s],
+                        policy=DegradedPolicy(max_retries=0), seed=0,
+                        expected_nnz=30, index_range=RANGE)
+ra.config(outs, ins)
+base = ra.reduce(vals, step=0)
+for s in range(1, 4):
+    out = ra.reduce(vals, step=s)
+    assert not out.degraded
+    assert out.event.klass == "replica-absorbed"
+    for i in range(M):
+        assert np.array_equal(np.asarray(out.values[i]),
+                              np.asarray(base.values[i])), (s, i)
+assert ra.stats["absorbed"] == 3
+assert ra.base.config_cache == "repair"
+print("ABSORBED_OK", ra.stats["repairs"])
+
+# repeat shrinks to the same survivor set are cache hits
+ra2 = ResilientAllreduce(M, (2, 2), replication=2,
+                         probe=lambda s, a: {1, 5} if s % 2 else None,
+                         policy=DegradedPolicy(max_retries=0), seed=0,
+                         expected_nnz=30, index_range=RANGE)
+ra2.config(outs, ins)
+for s in range(4):
+    ra2.reduce(vals, step=s)
+assert ra2.stats["shrinks"] == 1 and ra2.stats["shrink_reuses"] == 1
+print("SHRINK_CACHE_OK")
+
+# mode="fail" re-raises; deep faults raise QuorumLost for every mode
+ra3 = ResilientAllreduce(M, (2, 2), replication=2, dead={1, 5},
+                         policy=DegradedPolicy(mode="fail", max_retries=0),
+                         seed=0, expected_nnz=30, index_range=RANGE)
+ra3.config(outs, ins)
+try:
+    ra3.reduce(vals)
+    raise SystemExit("expected DeadLogicalNode")
+except DeadLogicalNode:
+    print("FAIL_MODE_OK")
+ra4 = ResilientAllreduce(M, (2, 2), replication=2,
+                         dead={0, 4, 1, 5, 2, 6},
+                         policy=DegradedPolicy(max_retries=0), seed=0,
+                         expected_nnz=30, index_range=RANGE)
+ra4.config(outs, ins)
+try:
+    ra4.reduce(vals)
+    raise SystemExit("expected QuorumLost")
+except QuorumLost:
+    print("QUORUM_OK")
+"""
+
+
+def test_absorbed_repair_shrink_cache_and_policies():
+    out = _run(_ABSORBED_AND_LIFECYCLE)
+    for tag in ("ABSORBED_OK", "SHRINK_CACHE_OK", "FAIL_MODE_OK",
+                "QUORUM_OK"):
+        assert tag in out, out
+
+
+# ---------------------------------------------------------------------------
+# supervised engine loop: remap mid-run is bit-identical
+# ---------------------------------------------------------------------------
+
+_ENGINE_REMAP = r"""
+import numpy as np
+from repro.core.faults import make_schedule
+from repro.data.pipeline import powerlaw_graph
+from repro.graph.pagerank import (build_partitions, make_pagerank_app,
+                                  pagerank_state)
+from repro.resilience import SupervisedEngineLoop
+
+N, M = 300, 4
+edges = powerlaw_graph(N, 1500, seed=0)
+parts = build_partitions(edges, N, M, seed=0)
+app, out_sets, in_sets = make_pagerank_app(parts, N)
+
+def run(schedule):
+    loop = SupervisedEngineLoop(out_sets, in_sets, app, degrees=(M,),
+                                seed=0, schedule=schedule, fault_at=2,
+                                ckpt_every=2)
+    extras, p0 = pagerank_state(parts, N, loop.engine.u_cap,
+                                loop.engine.uin_cap)
+    state, last_q = loop.run(8, p0, extras)
+    return np.asarray(state), np.asarray(last_q), loop
+
+s0, q0, _ = run(None)
+sched = make_schedule("rack", 16, 5, seed=1, rack_size=5)
+s1, q1, loop = run(sched)
+assert loop.remaps >= 1, "schedule never hit an engine device"
+assert np.array_equal(s0, s1) and np.array_equal(q0, q1)
+print("REMAP_OK remaps=", loop.remaps,
+      "events=", [e.klass for e in loop.events])
+"""
+
+
+def test_engine_remap_bit_identical_to_uninterrupted():
+    """A GraphEngine run that loses devices mid-run and remaps onto
+    spares finishes bit-identical to the fault-free run."""
+    out = _run(_ENGINE_REMAP)
+    assert "REMAP_OK" in out, out
+
+
+# ---------------------------------------------------------------------------
+# soak harness: subprocess kill-and-resume, both jobs
+# ---------------------------------------------------------------------------
+
+def _soak(out_dir, *extra, expect_rc=0):
+    cmd = [sys.executable, "-m", "repro.launch.soak",
+           "--out", str(out_dir), *map(str, extra)]
+    r = subprocess.run(cmd, env=_ENV, capture_output=True, text=True,
+                       timeout=560)
+    assert r.returncode == expect_rc, \
+        f"rc={r.returncode}\nstdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _assert_same_npz(a_path, b_path):
+    with np.load(a_path) as a, np.load(b_path) as b:
+        assert set(a.files) == set(b.files)
+        for k in a.files:
+            assert np.array_equal(a[k], b[k]), f"{k} differs"
+
+
+_TRAIN_ARGS = ("--job", "train", "--reduced", "--steps", 6,
+               "--ckpt-every", 2, "--batch", 4, "--seq", 32,
+               "--dp", 4, "--replication", 2, "--seed", 0)
+_RACK = ("--faults", "rack", "--fault-at", 3, "--num-failures", 5,
+         "--rack-size", 5)
+
+
+def test_soak_train_kill_and_resume_bit_identical(tmp_path):
+    """Acceptance: a training run under a mid-run rack fault schedule,
+    killed at step 4 and resumed, finishes with final params/optimizer
+    state bit-identical to the uninterrupted fault-free baseline."""
+    base, faulted = tmp_path / "base", tmp_path / "faulted"
+    out = _soak(base, *_TRAIN_ARGS)
+    assert "SOAK_OK job=train" in out
+    out = _soak(faulted, *_TRAIN_ARGS, *_RACK, "--kill-at", 4,
+                expect_rc=17)
+    assert "KILL step 4" in out
+    out = _soak(faulted, *_TRAIN_ARGS, *_RACK, "--resume")
+    assert "resumed at step 4" in out and "SOAK_OK job=train" in out
+    _assert_same_npz(base / "final.npz", faulted / "final.npz")
+    ma = json.loads((base / "final.meta.json").read_text())
+    mb = json.loads((faulted / "final.meta.json").read_text())
+    assert ma["losses"] == mb["losses"]
+    assert ma["events"] == [] and mb["events"] != []
+
+
+def test_soak_pagerank_kill_and_resume_bit_identical(tmp_path):
+    """Acceptance: same contract for the PageRank engine job."""
+    args = ("--job", "pagerank", "--steps", 8, "--ckpt-every", 2,
+            "--vertices", 200, "--edges", 800, "--graph-nodes", 4,
+            "--seed", 0)
+    base, faulted = tmp_path / "base", tmp_path / "faulted"
+    _soak(base, *args)
+    out = _soak(faulted, *args, *_RACK, "--kill-at", 4, expect_rc=17)
+    assert "KILL round 4" in out
+    out = _soak(faulted, *args, *_RACK, "--resume")
+    assert "resumed at round 4" in out and "SOAK_OK job=pagerank" in out
+    _assert_same_npz(base / "final.npz", faulted / "final.npz")
+
+
+def test_soak_resume_refuses_fingerprint_mismatch(tmp_path):
+    """Resuming with different hyperparameters than the checkpoint's
+    fingerprint must abort instead of silently diverging."""
+    out_dir = tmp_path / "run"
+    _soak(out_dir, *_TRAIN_ARGS, "--kill-at", 2, expect_rc=17)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.soak", "--out", str(out_dir),
+         *map(str, _TRAIN_ARGS), "--resume", "--lr", "0.01"],
+        env=_ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode != 0
+    assert "fingerprint" in r.stdout + r.stderr

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import load, save
+from repro.checkpoint.store import load, load_flat, save
 from repro.data.pipeline import Batcher, powerlaw_graph, zipf_tokens
 from repro.optim.adamw import AdamW
 
@@ -64,4 +64,8 @@ def test_checkpoint_roundtrip(tmp_path):
     back = load(path, tree)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         np.testing.assert_array_equal(a, b)
-    assert os.path.exists(path + ".meta.json")
+    # sidecar sits next to the extension-less base (same name whether the
+    # caller passed "ckpt" or "ckpt.npz"), so load_flat can find it back
+    assert os.path.exists(str(tmp_path / "ckpt.meta.json"))
+    _, meta = load_flat(path)
+    assert meta == {"step": 3}
