@@ -1,0 +1,212 @@
+"""Wire-format benchmarks (paper §IV bytes-on-wire, PR 8).
+
+Four row families, all under ``--only wire``:
+
+* ``wire/codec_*`` — device codec microbenches: bit-packed index
+  round-trip and int8 row quantization wall time, with the static
+  compression ratio each achieves.
+* ``wire/calib_bytes_*`` — the corrected calibration byte accounting:
+  ``measure_stage_samples`` prices each staged exchange as index + value
+  stream (``STAGE_IDX_DTYPE`` + ``STAGE_VAL_DTYPE`` = 8 B/entry, not the
+  old fp32-only 4 B/entry), and ``costmodel.wire_bytes_report`` prices
+  the encoded payloads the floor applies to.
+* ``wire/rerank_*`` — the tentpole claim: re-ranking degree
+  factorizations under the encoded byte model shifts the optimum.
+  Compression shrinks the bandwidth term but not latency/congestion, so
+  under a congested fabric the tuner trades stage width for depth.
+* ``wire/measured_*`` — host-mesh union_reduce wall with ``wire="delta"``
+  vs ``"raw"``, asserting bit-identical outputs while reporting the
+  encoded/raw byte ratio the model prices.
+
+Wall times are host-dependent as usual; the derived columns carry the
+reproducible quantities (byte formulas, degree picks, modeled seconds).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.autotune import (STAGE_IDX_DTYPE, STAGE_VAL_DTYPE,
+                                 fit_fabric, measure_stage_samples,
+                                 select_plan, synth_stage_samples)
+from repro.core.netmodel import EC2_2013, Fabric
+from repro.core.topology import ButterflyPlan
+from repro.kernels.costmodel import wire_bytes_report
+from repro.kernels.wirecodec import (encoded_payload_bytes, index_words,
+                                     pack_indices, quant8_rows,
+                                     unpack_indices)
+
+Row = Tuple[str, float, str]
+
+# Paper-scale workload constants (Twitter followers' graph, Table I)
+TW_N0, TW_RANGE = 12.1e6, 60e6
+
+# Ground truth for the deterministic rerank rows: the EC2 fabric plus a
+# congestion term — congestion is what makes the wire format move the
+# optimum (bandwidth shrinks, incast cost does not).
+GT = Fabric("ec2-2013-congested", beta_bytes_per_s=EC2_2013.beta_bytes_per_s,
+            alpha_s=EC2_2013.alpha_s, gamma_s=2e-4)
+
+
+def _calibrated() -> Fabric:
+    samples = synth_stage_samples(GT, [1e4, 1e5, 1e6, 4e6], [1, 3, 7, 15, 31])
+    return fit_fabric(samples, name="calibrated-ec2-congested")
+
+
+def bench_wire_codec() -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    r, cap, width = 8, 4096, 13
+    rng = np.random.RandomState(0)
+    base = np.arange(r, dtype=np.uint32) * np.uint32(1 << width)
+    offs = np.sort(rng.randint(0, (1 << width) - 1, size=(r, cap)), axis=1)
+    idx = jnp.asarray(base[:, None] + offs.astype(np.uint32))
+    b = jnp.asarray(base)
+
+    pack = jax.jit(lambda i: pack_indices(i, b, width))
+    unpack = jax.jit(lambda w: unpack_indices(w, b, cap, width))
+    words = pack(idx).block_until_ready()
+    back = unpack(words).block_until_ready()
+    assert bool(jnp.all(back == idx))
+    t0 = time.perf_counter()
+    for _ in range(20):
+        unpack(pack(idx)).block_until_ready()
+    dt = (time.perf_counter() - t0) / 20 * 1e6
+    packed_b = 4 * index_words(cap, width)
+    rows.append((f"wire/codec_roundtrip_cap{cap}_w{width}", dt,
+                 f"words={index_words(cap, width)} "
+                 f"packed_bytes={packed_b} raw_bytes={4 * cap} "
+                 f"ratio={4 * cap / packed_b:.2f} exact=1"))
+
+    val = jnp.asarray(rng.randn(r, cap).astype(np.float32))
+    quant = jax.jit(quant8_rows)
+    q, s = quant(val)
+    q.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        quant(val)[0].block_until_ready()
+    dt = (time.perf_counter() - t0) / 20 * 1e6
+    err = float(jnp.max(jnp.abs(q.astype(jnp.float32)
+                                * s[:, None] - val))
+                / jnp.max(jnp.abs(val)))
+    rows.append((f"wire/codec_quant8_cap{cap}", dt,
+                 f"value_bytes=1 raw=4 rel_err={err:.1e}"))
+    return rows
+
+
+def bench_wire_calibrated_bytes() -> List[Row]:
+    rows = []
+    # The satellite-1 regression, benchmarked: every staged sample is
+    # priced at idx+val itemsize (8 B/entry).  Fit the host-mesh fabric
+    # from samples carrying the corrected accounting.
+    entry_b = STAGE_IDX_DTYPE.itemsize + STAGE_VAL_DTYPE.itemsize
+    t0 = time.perf_counter()
+    measured = measure_stage_samples(payload_entries=(256, 4096, 16384),
+                                     repeats=3)
+    fit = fit_fabric(measured, name="calib-host-wire")
+    dt = (time.perf_counter() - t0) * 1e6
+    c = 4096
+    got = next(s.nbytes for s in measured
+               if abs(s.nbytes - c * entry_b) < entry_b)
+    rows.append(("wire/calib_bytes_measured_host", dt,
+                 f"entry_bytes={entry_b} nbytes_at_c4096={got:.0f} "
+                 f"formula=c*(idx4+val4) alpha_us={fit.alpha_s * 1e6:.1f} "
+                 f"beta_GBps={fit.beta_bytes_per_s / 1e9:.2f}"))
+
+    # Encoded-payload pricing the packet floor applies to, per wire mode.
+    cap, bits = 4096, 13
+    for wire in ("raw", "delta", "delta+bf16", "delta+int8ef"):
+        t0 = time.perf_counter()
+        rep = wire_bytes_report(cap, bits, wire=wire, fabric=GT)
+        dt = (time.perf_counter() - t0) * 1e6
+        assert rep["encoded_bytes"] == encoded_payload_bytes(wire, cap, bits)
+        rows.append((f"wire/calib_bytes_{wire.replace('+', '_')}", dt,
+                     f"cap={cap} bits={rep['index_bits']} "
+                     f"encoded={rep['encoded_bytes']} raw={rep['raw_bytes']} "
+                     f"compression={rep['compression']:.2f} "
+                     f"msg_ms={rep['msg_time_s'] * 1e3:.3f}"))
+    return rows
+
+
+def bench_wire_rerank() -> List[Row]:
+    fit = _calibrated()
+    rows = []
+    for m in (64, 256):
+        t0 = time.perf_counter()
+        rep_raw = select_plan(m, TW_N0, TW_RANGE, fit, wire="raw")
+        rep_bf16 = select_plan(m, TW_N0, TW_RANGE, fit, wire="delta+bf16")
+        dt = (time.perf_counter() - t0) * 1e6
+        # what keeping the raw-tuned plan would cost on the bf16 wire —
+        # the stage-time win of retuning per wire format
+        cross = rep_raw.plan.modeled_time(TW_N0, TW_RANGE, fit,
+                                          wire="delta+bf16")
+        shifted = rep_raw.plan.degrees != rep_bf16.plan.degrees
+        rows.append((f"wire/rerank_M{m}", dt,
+                     f"raw={rep_raw.plan} t={rep_raw.modeled_s:.3f}s "
+                     f"bf16={rep_bf16.plan} t={rep_bf16.modeled_s:.3f}s "
+                     f"raw_plan_on_bf16={cross:.3f}s shifted={int(shifted)} "
+                     f"retune_speedup={cross / rep_bf16.modeled_s:.3f}"))
+    return rows
+
+
+def bench_wire_measured_stage() -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import SparseAllreduce
+
+    rows = []
+    m = len(jax.devices())
+    if m < 8:
+        return rows
+    from repro.core.sparse_vec import HashPerm
+
+    M, C = 8, 1024
+    rng = np.random.RandomState(7)
+    perm = HashPerm.make(9)
+    idx = np.stack([
+        np.sort(perm.fwd_np(
+            rng.choice(1 << 20, C, replace=False).astype(np.uint32)))
+        for _ in range(M)])
+    val = (rng.randint(-128, 129, size=(M, C)) / 64.0).astype(np.float32)
+
+    outs = {}
+    for wire in ("raw", "delta"):
+        ar = SparseAllreduce(M, (4, 2), backend="device", seed=3, wire=wire)
+        t0 = time.perf_counter()
+        oi, ov, ovf = ar.union_reduce(jnp.asarray(idx), jnp.asarray(val),
+                                      out_capacity=M * C)
+        jax.block_until_ready((oi, ov))
+        cold = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        for _ in range(5):
+            oi, ov, ovf = ar.union_reduce(jnp.asarray(idx),
+                                          jnp.asarray(val),
+                                          out_capacity=M * C)
+            jax.block_until_ready((oi, ov))
+        warm = (time.perf_counter() - t0) / 5 * 1e6
+        assert int(np.asarray(ovf).sum()) == 0
+        outs[wire] = (np.asarray(oi), np.asarray(ov))
+        bits = ButterflyPlan(M, (4, 2)).index_bits_per_layer()[0]
+        enc = encoded_payload_bytes(wire, C, bits)
+        rows.append((f"wire/measured_union_M{M}_{wire}", warm,
+                     f"cold_us={cold:.0f} stage0_bytes={enc} "
+                     f"raw_bytes={encoded_payload_bytes('raw', C, bits)} "
+                     f"host_mesh=1"))
+    assert np.array_equal(outs["raw"][0], outs["delta"][0])
+    assert np.array_equal(outs["raw"][1], outs["delta"][1])
+    rows.append(("wire/measured_union_bit_identity", 0.0,
+                 "delta_eq_raw=1 indices_and_values=1"))
+    return rows
+
+
+ALL_BENCHES = [
+    bench_wire_codec,
+    bench_wire_calibrated_bytes,
+    bench_wire_rerank,
+    bench_wire_measured_stage,
+]

@@ -356,6 +356,85 @@ class DebugInHotRule(HotRule):
                 f"{region.qualname!r}")
 
 
+@register
+class WirePathWideningCastRule(HotRule):
+    """RA207: no widening dtype casts on packed wire buffers inside hot
+    regions of the wire path.
+
+    The compressed wire formats (``kernels.wirecodec``) exist so bit-packed
+    index words and quantized values traverse the butterfly *without* a
+    widened intermediate — decode is fused into the merge kernels
+    (``ops.merge_sorted_runs(row_scale=...)``).  An ``astype(jnp.float32)``
+    / ``jnp.uint32(...)`` on a packed buffer (identifier matching
+    ``packed|words|wire|payload``) inside traced wire-path code
+    materializes the 4-byte form the codec was built to avoid, silently
+    restoring raw-size HBM traffic right where the compression win lives.
+    Widening a *decoded* value (``base``, ``val``, ``scale`` …) is fine —
+    the receiver-name gate keeps those out of scope.
+    """
+
+    rule_id = "RA207"
+    severity = Severity.ERROR
+    title = "widening cast on a packed wire buffer in the wire path"
+    rationale = ("the wire codecs keep payloads packed end-to-end (decode "
+                 "fuses into the merge kernels); widening a packed buffer "
+                 "in traced code re-materializes the raw-size intermediate "
+                 "the compression exists to avoid")
+    scope = ("kernels/*.py", "core/allreduce.py")
+
+    # >= 4-byte element types: casting a packed buffer to any of these
+    # re-materializes (at least) the raw wire width.
+    _WIDE = {"float32", "float64", "uint32", "int32", "uint64", "int64",
+             "complex64", "complex128"}
+    _PACKED_RE = re.compile(r"packed|words|wire|payload", re.IGNORECASE)
+
+    def _wide_dtype(self, node: ast.AST) -> Optional[str]:
+        """Dtype name when ``node`` denotes a >= 4-byte dtype, else None."""
+        if isinstance(node, ast.Attribute) and node.attr in self._WIDE and \
+                _base_name(node) in (_NP_MODULES | {"jnp", "jax"}):
+            return node.attr
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and node.value in self._WIDE:
+            return node.value
+        if isinstance(node, ast.keyword):
+            return self._wide_dtype(node.value)
+        return None
+
+    @staticmethod
+    def _receiver_root(node: ast.AST) -> Optional[str]:
+        """Leftmost Name through subscript/attribute chains
+        (``words[:, w].astype`` roots at ``words``)."""
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return node.id if isinstance(node, ast.Name) else None
+
+    def check_hot_node(self, ctx, region, node):
+        """Flag astype/constructor widening of packed-buffer receivers."""
+        if not isinstance(node, ast.Call):
+            return
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "astype":
+            dt = None
+            if node.args:
+                dt = self._wide_dtype(node.args[0])
+            for kw in node.keywords:
+                dt = dt or self._wide_dtype(kw)
+            root = self._receiver_root(fn.value)
+            if dt and root and self._PACKED_RE.search(root):
+                yield self.violation(
+                    ctx, node, f"{root}.astype({dt}) widens a packed wire "
+                    f"buffer in hot region {region.qualname!r}; keep the "
+                    f"payload packed (decode fuses into the merge kernels)")
+        elif isinstance(fn, ast.Attribute) and fn.attr in self._WIDE and \
+                _base_name(fn) in (_NP_MODULES | {"jnp"}) and node.args:
+            root = self._receiver_root(node.args[0])
+            if root and self._PACKED_RE.search(root):
+                yield self.violation(
+                    ctx, node, f"jnp.{fn.attr}({root}) widens a packed "
+                    f"wire buffer in hot region {region.qualname!r}; keep "
+                    f"the payload packed")
+
+
 # ---------------------------------------------------------------------------
 # RA3xx — jit hygiene
 # ---------------------------------------------------------------------------

@@ -33,7 +33,7 @@ from jax import lax
 
 from .sparse_vec import (SENTINEL, SparseChunk, bucket_partition,
                          concat_sorted_groups, segment_compact, sort_chunk)
-from .topology import ButterflyPlan
+from .topology import ButterflyPlan, check_wire
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +188,8 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
                            edges: Sequence[jax.Array],
                            use_kernel: bool = False,
                            merge: str = "sort",
-                           weight: Optional[jax.Array] = None
+                           weight: Optional[jax.Array] = None,
+                           wire: str = "raw"
                            ) -> Tuple[SparseChunk, jax.Array]:
     """Nested butterfly sparse allreduce; every node gets the full union sum.
 
@@ -210,35 +211,79 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
     first layer so every shard's sum is taken from exactly one replica.
     Indices still flow from every replica (zeros merge away bit-exactly),
     so the union is identical to the fault-free non-replicated result.
+    ``wire`` picks the on-wire payload encoding (``topology.WIRE_MODES``;
+    codecs in ``repro.kernels.wirecodec``): every collective then carries
+    bit-packed index offsets instead of uint32 words, and — for the lossy
+    modes — bf16 or per-row int8 values, decoded against the statically
+    known stage subrange base on the receiving side (down: this device's
+    bucket; up: gather row t covers subrange t).  ``"delta"`` is exactly
+    lossless, so its result is bit-identical to ``"raw"``; for the fused
+    merge modes the int8 dequantization rides inside the scatter kernel
+    (``merge_sorted_runs(row_scale=...)``) so wire payloads are never
+    widened in memory.
     Returns (union chunk of capacity ``out_capacity`` per device replica,
     overflow count — entries dropped to capacity anywhere in the network).
     """
     if merge not in MERGE_MODES:
         raise ValueError(f"merge must be one of {MERGE_MODES}, got {merge!r}")
+    check_wire(wire)
     if weight is not None:
         w = weight.reshape(()).astype(chunk.val.dtype)
         chunk = SparseChunk(idx=chunk.idx, val=chunk.val * w)
     overflow = jnp.zeros((), jnp.int32)
+    compute_dtype = chunk.val.dtype
+    if wire != "raw":
+        from repro.kernels import wirecodec as _wc
+        widths = _wc.stage_index_bits(plan)
+        strides = _wc.stage_strides(plan)
 
     # ---- down: scatter-reduce through the layers --------------------------
     for l, st in enumerate(plan.stages):
         e = edges[l].reshape((-1,))[-(st.degree + 1):]
+        groups = list(map(list, st.axis_index_groups))
         buckets, ovf = bucket_partition(chunk, e, st.degree,
                                         st.bucket_capacity)
         overflow = overflow + ovf
-        r_idx = lax.all_to_all(buckets.idx, st.axis_name, split_axis=0,
-                               concat_axis=0,
-                               axis_index_groups=list(map(list, st.axis_index_groups)))
-        r_val = lax.all_to_all(buckets.val, st.axis_name, split_axis=0,
-                               concat_axis=0,
-                               axis_index_groups=list(map(list, st.axis_index_groups)))
+        scale = None
+        if wire == "raw":
+            send_idx, send_val = buckets.idx, buckets.val
+        else:
+            # Bucket d covers [e[d], e[d+1]); ship offsets from e[d].
+            send_idx = _wc.pack_indices(buckets.idx,
+                                        e[:st.degree].astype(jnp.uint32),
+                                        widths[l])
+            send_val = buckets.val
+            if wire == "delta+bf16":
+                send_val = send_val.astype(jnp.bfloat16)
+            elif wire == "delta+int8ef":
+                send_val, scale = _wc.quant8_rows(send_val)
+        r_idx = lax.all_to_all(send_idx, st.axis_name, split_axis=0,
+                               concat_axis=0, axis_index_groups=groups)
+        r_val = lax.all_to_all(send_val, st.axis_name, split_axis=0,
+                               concat_axis=0, axis_index_groups=groups)
+        r_scale = None
+        if scale is not None:
+            r_scale = lax.all_to_all(scale, st.axis_name, split_axis=0,
+                                     concat_axis=0, axis_index_groups=groups)
+        if wire != "raw":
+            # Every received row is a bucket for *this* device's subrange,
+            # whose base is e[j] with j = our position in the stage group
+            # (group members share identical stage-l edges).
+            j = (lax.axis_index(st.axis_name) // strides[l]) % st.degree
+            base = jnp.broadcast_to(e[j].astype(jnp.uint32), (st.degree,))
+            r_idx = _wc.unpack_indices(r_idx, base, st.bucket_capacity,
+                                       widths[l])
         if merge in ("fused", "banded"):
             from repro.kernels import ops as _kops
-            chunk, movf = _kops.merge_sorted_runs(r_idx, r_val,
-                                                  st.merged_capacity,
-                                                  mode=merge)
+            chunk, movf = _kops.merge_sorted_runs(
+                r_idx, r_val, st.merged_capacity, mode=merge,
+                row_scale=r_scale,
+                out_dtype=compute_dtype if wire != "raw" else None)
             overflow = overflow + movf
         else:
+            if r_scale is not None:
+                r_val = _wc.dequant8_rows(r_val, r_scale)
+            r_val = r_val.astype(compute_dtype)
             cat = concat_sorted_groups(r_idx, r_val)
             from .sparse_vec import compact_overflow
             overflow = overflow + compact_overflow(cat, st.merged_capacity)
@@ -246,12 +291,46 @@ def sparse_allreduce_union(chunk: SparseChunk, plan: DevicePlan,
                                     use_kernel=use_kernel)
 
     # ---- up: allgather back through the same nodes (nested) ---------------
-    for st in reversed(plan.stages):
+    for li in range(len(plan.stages) - 1, -1, -1):
+        st = plan.stages[li]
         g = list(map(list, st.axis_index_groups))
-        idx = lax.all_gather(chunk.idx, st.axis_name, axis_index_groups=g,
-                             axis=0, tiled=True)
-        val = lax.all_gather(chunk.val, st.axis_name, axis_index_groups=g,
-                             axis=0, tiled=True)
+        if wire == "raw":
+            idx = lax.all_gather(chunk.idx, st.axis_name, axis_index_groups=g,
+                                 axis=0, tiled=True)
+            val = lax.all_gather(chunk.val, st.axis_name, axis_index_groups=g,
+                                 axis=0, tiled=True)
+        else:
+            # The sender's chunk covers its own stage-li subrange [e[j],
+            # e[j+1]); after the gather, row t covers subrange t of the
+            # group-shared edges, so both bases are static knowledge.
+            k = st.degree
+            e = edges[li].reshape((-1,))[-(k + 1):]
+            j = (lax.axis_index(st.axis_name) // strides[li]) % k
+            packed = _wc.pack_indices(chunk.idx[None, :],
+                                      e[j].astype(jnp.uint32)[None],
+                                      widths[li])[0]
+            words = lax.all_gather(packed, st.axis_name, axis_index_groups=g,
+                                   axis=0, tiled=True).reshape((k, -1))
+            idx = _wc.unpack_indices(words, e[:k].astype(jnp.uint32),
+                                     chunk.capacity, widths[li]
+                                     ).reshape((-1,))
+            if wire == "delta":
+                val = lax.all_gather(chunk.val, st.axis_name,
+                                     axis_index_groups=g, axis=0, tiled=True)
+            elif wire == "delta+bf16":
+                val = lax.all_gather(chunk.val.astype(jnp.bfloat16),
+                                     st.axis_name, axis_index_groups=g,
+                                     axis=0, tiled=True).astype(compute_dtype)
+            else:
+                q, s = _wc.quant8_rows(chunk.val[None])
+                gq = lax.all_gather(q[0], st.axis_name, axis_index_groups=g,
+                                    axis=0, tiled=True)
+                gs = lax.all_gather(s, st.axis_name, axis_index_groups=g,
+                                    axis=0, tiled=True)        # [k] row scales
+                per = jnp.repeat(gs.astype(jnp.float32), chunk.capacity)
+                val = (gq.astype(jnp.float32)
+                       * per[(...,) + (None,) * (gq.ndim - 1)]
+                       ).astype(compute_dtype)
         chunk = SparseChunk(idx=idx, val=val)  # concat of sorted disjoint ranges
 
     # Trim/pad to the advertised out capacity (sorted already).
@@ -324,13 +403,16 @@ def dense_allreduce_binary(x: jax.Array, axis_name: str, axis_size: int) -> jax.
 def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
                         idx: jax.Array, val: jax.Array,
                         use_kernel: bool = False, merge: str = "sort",
-                        dead=None):
+                        dead=None, wire: str = "raw"):
     """Convenience wrapper: shard (idx, val) over the plan's axes and run.
 
     idx: uint32 [M, C] hashed *sorted* indices per node (SENTINEL padded)
     val: [M, C] or [M, C, W]
     ``merge``: per-layer merge strategy ("sort" | "fused" | "banded"); see
     :func:`sparse_allreduce_union`.
+    ``wire``: on-wire payload encoding ("raw" | "delta" | "delta+bf16" |
+    "delta+int8ef"); "delta" is bit-identical to "raw", the lossy modes
+    trade bounded value error for bytes (see ``kernels.wirecodec``).
     ``dead``: set of dead *physical* node ids for r-way replicated plans
     (``make_device_plan(replication=r)``); the corresponding
     ``contribution_weights`` are applied inside shard_map so each logical
@@ -370,7 +452,7 @@ def run_union_allreduce(mesh: jax.sharding.Mesh, plan: DevicePlan,
         v = v.reshape(v.shape[len(shape):])
         chunk, ovf = sparse_allreduce_union(SparseChunk(idx=i, val=v), plan,
                                             e, use_kernel=use_kernel,
-                                            merge=merge, weight=w)
+                                            merge=merge, weight=w, wire=wire)
         pad = (1,) * len(shape)
         return (chunk.idx.reshape(pad + chunk.idx.shape),
                 chunk.val.reshape(pad + chunk.val.shape),

@@ -42,7 +42,7 @@ import numpy as np
 from .netmodel import EC2_2013, Fabric
 from .sparse_vec import HashPerm
 from .simulator import ReduceStats, SimSparseAllreduce
-from .topology import ButterflyPlan, tune
+from .topology import ButterflyPlan, check_wire, tune
 
 
 class SparseAllreduce:
@@ -56,7 +56,8 @@ class SparseAllreduce:
                  fabric: Fabric = EC2_2013, seed: int = 0,
                  value_width: int = 1, mesh=None,
                  expected_nnz: float = 1e5, index_range: float = 1e6,
-                 merge: str = "sort", plan_cache=True, retune: bool = False):
+                 merge: str = "sort", wire: str = "raw",
+                 plan_cache=True, retune: bool = False):
         """``merge`` ("sort" | "fused" | "banded") picks the
         per-butterfly-layer merge used by the dynamic-index union path
         (:meth:`union_reduce`): concatenate-and-resort, the fused Pallas
@@ -65,6 +66,19 @@ class SparseAllreduce:
         the per-layer tile work to near-linear.  The planned ``reduce``
         path freezes routing at ``config`` time and has no merge stage, so
         the knob does not affect it.
+
+        ``wire`` ("raw" | "delta" | "delta+bf16" | "delta+int8ef") picks
+        the on-wire payload encoding of the union path (see
+        ``repro.kernels.wirecodec``): raw ships uint32 indices + f32
+        values; ``delta`` bit-packs the sorted index stream at each
+        stage's residual width (bit-identical results); the lossy modes
+        additionally quantize values to bf16 / per-row-scaled int8.  The
+        knob re-ranks ``degrees="auto"`` under the encoded byte model and
+        keys the plan cache per wire format.  The planned ``reduce`` path
+        ships pre-routed values only (no index stream), so raw/delta are
+        equivalent no-ops there and the lossy modes are rejected; the sim
+        backend models bytes, not value precision, and rejects lossy modes
+        at construction.
 
         ``plan_cache`` controls the autotuner's persistent cache
         (``repro.core.autotune``): ``True`` (default) uses the process
@@ -89,6 +103,12 @@ class SparseAllreduce:
                 f"plan_cache must be True, False or a PlanCache (to pin a "
                 f"root, pass PlanCache(root=...)), got {plan_cache!r}")
         self.merge = merge
+        self.wire = check_wire(wire)
+        if backend == "sim" and self.wire in ("delta+bf16", "delta+int8ef"):
+            raise NotImplementedError(
+                f"backend='sim' models message bytes, not value precision; "
+                f"wire={self.wire!r} has no sim semantics (use 'raw' or "
+                f"'delta', or backend='device')")
         self.num_nodes = num_nodes
         self.degrees_source = "explicit"
         if degrees == "auto":
@@ -97,10 +117,12 @@ class SparseAllreduce:
                 degrees, self.degrees_source = resolve_degrees(
                     num_nodes, n0=expected_nnz, total_range=index_range,
                     fabric=fabric, merge=merge, replication=replication,
-                    width=value_width, cache=self.plan_cache, retune=retune)
+                    width=value_width, cache=self.plan_cache, retune=retune,
+                    wire=self.wire)
             else:
                 plan = tune(num_nodes, n0=expected_nnz,
-                            total_range=index_range, fabric=fabric)
+                            total_range=index_range, fabric=fabric,
+                            wire=self.wire, value_width=value_width)
                 degrees, self.degrees_source = plan.degrees, "tuned"
         self.plan = ButterflyPlan(num_nodes, tuple(degrees))
         self.backend = backend
@@ -165,6 +187,12 @@ class SparseAllreduce:
                 perm=self.perm, fabric=self.fabric, value_width=self.width)
             return self._sim.config(out_indices, in_indices)
         elif self.backend == "device":
+            if self.wire in ("delta+bf16", "delta+int8ef"):
+                raise NotImplementedError(
+                    f"the planned reduce path ships pre-routed values only "
+                    f"(no index stream), and quantized planned payloads are "
+                    f"not implemented; wire={self.wire!r} is only supported "
+                    f"on the union path (union_reduce / train sync)")
             from .replication import first_alive_replicas
             r, m_phys = self.replication, self.num_physical
             # Validates the failure set before touching the mesh: raises
@@ -328,7 +356,9 @@ class SparseAllreduce:
     def union_reduce(self, idx, val, out_capacity: int,
                      use_kernel: bool = False):
         """Gather-all union sum with dynamic indices (the paper's mini-batch
-        mode) on a device mesh, honouring the ``merge`` knob.
+        mode) on a device mesh, honouring the ``merge`` and ``wire`` knobs
+        (with ``wire="delta"`` results are bit-identical to ``"raw"``; the
+        lossy modes trade bounded value error for wire bytes).
 
         idx: uint32 [num_nodes, C] *hashed, sorted*, SENTINEL-padded per-node
         indices; val: [num_nodes, C] or [num_nodes, C, W] — one chunk per
@@ -361,7 +391,7 @@ class SparseAllreduce:
             idx = jnp.tile(idx, (r,) + (1,) * (idx.ndim - 1))
             val = jnp.tile(val, (r,) + (1,) * (val.ndim - 1))
         key = (idx.shape, val.shape, val.dtype, out_capacity, use_kernel,
-               frozenset(self.dead or ()))
+               frozenset(self.dead or ()), self.wire)
         fn = self._union_cache.get(key)
         if fn is None:
             mesh = self.mesh
@@ -374,7 +404,7 @@ class SparseAllreduce:
                 replication=r)
             fn = jax.jit(lambda i, v: run_union_allreduce(
                 mesh, dplan, i, v, use_kernel=use_kernel, merge=self.merge,
-                dead=self.dead))
+                dead=self.dead, wire=self.wire))
             self._union_cache[key] = fn
         oi, ov, ovf = fn(idx, val)
         if r > 1:

@@ -49,10 +49,16 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .netmodel import EC2_2013, Fabric
-from .topology import ButterflyPlan, num_prime_factors, tune
+from .topology import ButterflyPlan, check_wire, num_prime_factors, tune
 
 CACHE_ENV = "REPRO_PLAN_CACHE"
 _KEY_VERSION = 1
+
+# Dtypes staged through the calibration all_to_alls — the same streams the
+# real union path ships per stage (uint32 index + fp32 value).  The sample
+# byte accounting below derives from these itemsizes; keep them in sync.
+STAGE_IDX_DTYPE = np.dtype(np.uint32)
+STAGE_VAL_DTYPE = np.dtype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -165,11 +171,16 @@ def measure_stage_samples(mesh=None, *, payload_entries=(256, 4096, 32768),
     For each *stage degree* ``k`` in ``degrees`` (default: the divisors of
     the mesh size among {2, 4, 8, 16, 32, m}; every k must divide the mesh
     size so the groups tile it) and each payload size, one jitted
-    shard_map program exchanges ``[k, c]`` float32 blocks within
+    shard_map program exchanges the two streams a real butterfly stage
+    ships — ``[k, c]`` uint32 indices *and* ``[k, c]`` float32 values
+    (``STAGE_IDX_DTYPE`` / ``STAGE_VAL_DTYPE``) — within
     ``axis_index_groups`` of size k; best-of-``repeats`` wall time becomes
-    a :class:`StageSample` with ``fanout = k - 1`` peers.  Off-TPU (host
-    devices) this calibrates the XLA-CPU collective cost — noisy but
-    *measured*, which is the point; perf claims belong on real fabrics.
+    a :class:`StageSample` with ``fanout = k - 1`` peers and ``nbytes =
+    c * (idx.itemsize + val.itemsize)`` per destination.  (Pricing values
+    alone would under-count the wire ~2x and skew every fabric fit.)
+    Off-TPU (host devices) this calibrates the XLA-CPU collective cost —
+    noisy but *measured*, which is the point; perf claims belong on real
+    fabrics.
     """
     import jax
     import jax.numpy as jnp
@@ -193,23 +204,33 @@ def measure_stage_samples(mesh=None, *, payload_entries=(256, 4096, 32768),
     for k in degrees:
         groups = [list(range(g * k, (g + 1) * k)) for g in range(m // k)]
 
-        def body(xb):
-            y = lax.all_to_all(xb.reshape(xb.shape[1:]), axis,
-                               split_axis=0, concat_axis=0,
-                               axis_index_groups=groups)
-            return y.reshape((1,) + y.shape)
+        def body(ib, vb):
+            yi = lax.all_to_all(ib.reshape(ib.shape[1:]), axis,
+                                split_axis=0, concat_axis=0,
+                                axis_index_groups=groups)
+            yv = lax.all_to_all(vb.reshape(vb.shape[1:]), axis,
+                                split_axis=0, concat_axis=0,
+                                axis_index_groups=groups)
+            return (yi.reshape((1,) + yi.shape),
+                    yv.reshape((1,) + yv.shape))
 
-        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(axis),
-                               out_specs=P(axis), check_vma=False))
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                               out_specs=(P(axis), P(axis)),
+                               check_vma=False))
         for c in payload_entries:
-            x = jnp.asarray(rng.rand(m, k, int(c)).astype(np.float32))
-            jax.block_until_ready(fn(x))          # compile outside timing
+            xi = jnp.asarray(rng.randint(
+                0, 1 << 31, size=(m, k, int(c))).astype(STAGE_IDX_DTYPE))
+            xv = jnp.asarray(rng.rand(m, k, int(c)).astype(STAGE_VAL_DTYPE))
+            jax.block_until_ready(fn(xi, xv))     # compile outside timing
             best = float("inf")
             for _ in range(repeats):
                 t0 = time.perf_counter()
-                jax.block_until_ready(fn(x))
+                jax.block_until_ready(fn(xi, xv))
                 best = min(best, time.perf_counter() - t0)
-            samples.append(StageSample(nbytes=float(c) * 4.0,
+            # Wire bytes per destination: both streams, actual itemsizes.
+            nbytes = float(c) * float(STAGE_IDX_DTYPE.itemsize
+                                      + STAGE_VAL_DTYPE.itemsize)
+            samples.append(StageSample(nbytes=nbytes,
                                        fanout=k - 1, time_s=best))
     return samples
 
@@ -294,6 +315,7 @@ def select_plan(num_nodes: int, n0: float, total_range: float,
                 fabric: Fabric = EC2_2013, *,
                 bytes_per_entry: float = 12.0, serial_nic: bool = True,
                 top_k: int = 5, max_depth: int = 6,
+                wire: str = "raw", value_width: int = 1,
                 confirm: Optional[Callable[[ButterflyPlan], float]] = None
                 ) -> TuneReport:
     """Rank all degree sequences under ``fabric`` with the power-law
@@ -306,12 +328,20 @@ def select_plan(num_nodes: int, n0: float, total_range: float,
     fallback and are recorded in ``report.fallback``.  A winner violating
     the paper's decreasing-degree structure is reported (and warned) but
     not overridden.
+
+    ``wire`` re-ranks under the *encoded* per-stage byte model
+    (``topology.wire_entry_bytes``): compression shrinks the bandwidth
+    term without touching latency/congestion, so the optimal degree
+    factorization can genuinely shift — that re-ranking is the point of
+    tuning per wire format (see ``benchmarks/bench_wire.py``).
     """
+    check_wire(wire)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         scored = tune(num_nodes, n0, total_range, fabric, bytes_per_entry,
                       serial_nic=serial_nic, top=max(int(top_k), 1),
-                      max_depth=max_depth)
+                      max_depth=max_depth, wire=wire,
+                      value_width=value_width)
     fallback = None
     for w in caught:
         msg = str(w.message)
@@ -363,7 +393,8 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
                    index_range: float, merge: str, replication: int,
                    width: int, fabric: Fabric,
                    serial_nic: bool = True,
-                   shrunk_from: Optional[int] = None) -> dict:
+                   shrunk_from: Optional[int] = None,
+                   wire: str = "raw") -> dict:
     """The cache key: mesh shape, quantized nnz profile, merge mode,
     replication, value width, fabric fingerprint, NIC serialization mode,
     key-schema version.  Any field changing = a different plan file
@@ -374,7 +405,13 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
     replanning a fleet that started at that logical size — keyed
     separately from native plans of equal size (the nnz profile carried
     over from the original fleet differs), and only added to the key when
-    set, so every pre-existing digest is unchanged."""
+    set, so every pre-existing digest is unchanged.
+
+    ``wire`` keys plans per wire format: degrees tuned under compressed
+    payloads are *not* valid answers for raw ones (the byte model differs),
+    so a raw-tuned entry must never be served for e.g. ``delta+bf16``.
+    Like ``shrunk_from`` it enters the key only when non-default, keeping
+    every pre-existing "raw" digest stable."""
     key = {
         "kind": "plan", "version": _KEY_VERSION,
         "mesh": [[str(a), int(s)] for a, s in mesh],
@@ -386,6 +423,8 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
     }
     if shrunk_from is not None:
         key["shrunk_from"] = int(shrunk_from)
+    if check_wire(wire) != "raw":
+        key["wire"] = str(wire)
     return key
 
 
@@ -520,7 +559,8 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
                     cache: Optional[PlanCache] = None,
                     retune: bool = False, top_k: int = 5,
                     confirm: Optional[Callable] = None,
-                    shrunk_from: Optional[int] = None
+                    shrunk_from: Optional[int] = None,
+                    wire: str = "raw"
                     ) -> Tuple[Tuple[int, ...], str]:
     """Cached, calibrated degree selection — returns ``(degrees, source)``
     with ``source`` in ``{"cache", "tuned"}``.
@@ -534,6 +574,9 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
     :func:`plan_cache_key`) — a repeat shrink to the same survivor count
     is then a cache hit, which is what keeps ``repro.resilience``
     recovery cheap.
+    ``wire`` tunes under the encoded byte model and keys the cache entry
+    per wire format (a raw-tuned plan is never served for a compressed
+    wire, and vice versa).
     """
     cache = cache or default_cache()
     sig = tuple(mesh_sig) if mesh_sig else (("nodes", int(num_nodes)),)
@@ -542,7 +585,7 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
     key = plan_cache_key(mesh=sig, nnz=n0, index_range=total_range,
                          merge=merge, replication=replication, width=width,
                          fabric=fabric, serial_nic=serial_nic,
-                         shrunk_from=shrunk_from)
+                         shrunk_from=shrunk_from, wire=wire)
     if not retune:
         hit = cache.load(key)
         if hit is not None:
@@ -553,6 +596,7 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
                 return degrees, "cache"
     report = select_plan(num_nodes, n0, total_range, fabric,
                          serial_nic=serial_nic, top_k=top_k,
+                         wire=wire, value_width=width,
                          confirm=confirm)
     cache.store(key, {
         "degrees": [int(d) for d in report.plan.degrees],
@@ -563,7 +607,7 @@ def resolve_degrees(num_nodes: int, *, n0: float, total_range: float,
         "candidates": [[t, list(d)] for t, d in report.candidates],
         "measured_s": report.measured_s,
         "n0": float(n0), "total_range": float(total_range),
-        "serial_nic": bool(serial_nic),
+        "serial_nic": bool(serial_nic), "wire": str(wire),
     })
     return report.plan.degrees, "tuned"
 

@@ -49,6 +49,11 @@ class Fabric:
       cost in here).
     * ``floor_bytes`` — effective packet floor in bytes: payloads below it
       cost the same as ``floor_bytes`` (default 0 = pure alpha-beta).
+      The floor applies to *on-wire* bytes — i.e. post-encoding sizes when
+      a compressed wire format is in play — and it is applied exactly once,
+      inside :meth:`msg_time`.  Callers (``topology.modeled_time``, the
+      simulator's stage accounting, ``autotune.fit_fabric``) must pass
+      un-floored encoded payload sizes and never pre-clamp.
     * ``gamma_s`` — congestion seconds added to *each* message per extra
       concurrent peer in the same stage (default 0 = classic model; fitted
       from measurement by ``repro.core.autotune.fit_fabric``).
@@ -61,7 +66,12 @@ class Fabric:
 
     def msg_time(self, nbytes: float, fanout: int = 1) -> float:
         """Seconds to send one ``nbytes`` message while exchanging with
-        ``fanout`` peers total (the fanout-1 others contribute congestion)."""
+        ``fanout`` peers total (the fanout-1 others contribute congestion).
+
+        ``nbytes`` is the *on-wire* (post-encoding) payload size; the
+        packet floor is applied here, exactly once — callers must not
+        clamp to ``floor_bytes`` themselves.
+        """
         payload = max(float(nbytes), self.floor_bytes)
         congest = self.gamma_s * max(fanout - 1, 0)
         return self.alpha_s + congest + payload / self.beta_bytes_per_s

@@ -30,6 +30,38 @@ from .netmodel import EC2_2013, Fabric
 
 SPACE = 1 << 32  # hashed index space size
 
+# Union-path wire formats (device codecs in repro.kernels.wirecodec; here
+# they only change the modeled bytes-per-entry).  "raw" ships uint32 index
+# + fp32 value (4+4 B/entry); the "delta" family bit-packs indices as
+# offsets from the stage subrange base (width shrinks with depth) and
+# optionally narrows values to bf16 or per-row-scaled int8.
+WIRE_MODES = ("raw", "delta", "delta+bf16", "delta+int8ef")
+
+_WIRE_VALUE_BYTES = {"raw": 4.0, "delta": 4.0, "delta+bf16": 2.0,
+                     "delta+int8ef": 1.0}
+
+
+def check_wire(wire: str) -> str:
+    """Validate a wire-format name; returns it for chaining."""
+    if wire not in WIRE_MODES:
+        raise ValueError(f"wire must be one of {WIRE_MODES}, got {wire!r}")
+    return wire
+
+
+def wire_entry_bytes(wire: str, index_bits: int = 32,
+                     width: int = 1) -> float:
+    """Modeled on-wire bytes per sparse entry under ``wire``.
+
+    ``index_bits`` is the packed offset width at the stage in question
+    (32 for "raw", which always ships whole uint32 words); ``width`` is
+    the value vector width.  The int8ef per-row scale word is amortized
+    across the row and priced separately by ``modeled_time``.
+    """
+    check_wire(wire)
+    if wire == "raw":
+        index_bits = 32
+    return index_bits / 8.0 + _WIRE_VALUE_BYTES[wire] * width
+
 
 def _check_degrees(num_nodes: int, degrees: Sequence[int]) -> None:
     if math.prod(degrees) != num_nodes:
@@ -136,23 +168,63 @@ class ButterflyPlan:
             r = r_next
         return counts
 
+    def index_bits_per_layer(self) -> List[int]:
+        """Modeled packed-offset width (bits) of the delta wire codec at
+        each layer: ``ceil(log2(span + 1))`` for the layer-l subrange span
+        ``SPACE / prod(k_1..k_l)``.  Matches the codec's edge-derived
+        widths exactly for power-of-2 meshes (remainder-free splits); off
+        by at most one bit otherwise.
+        """
+        bits, r = [], float(SPACE)
+        for k in self.degrees:
+            r = r / k
+            bits.append(max(1, min(32, int(math.ceil(math.log2(r + 1.0))))))
+        return bits
+
+    def _layer_entry_bytes(self, bytes_per_entry: float, wire: str,
+                           value_width: int) -> List[float]:
+        """Per-layer bytes/entry: the caller's raw ``bytes_per_entry``
+        scaled by the wire format's compression ratio at that layer."""
+        if wire == "raw":
+            return [bytes_per_entry] * self.depth
+        raw = wire_entry_bytes("raw", 32, value_width)
+        return [bytes_per_entry * wire_entry_bytes(wire, b, value_width) / raw
+                for b in self.index_bits_per_layer()]
+
     def packet_bytes(self, n0: float, total_range: float,
-                     bytes_per_entry: float = 12.0) -> List[float]:
-        """Modeled per-destination message size at each down layer (Fig 5)."""
+                     bytes_per_entry: float = 12.0,
+                     wire: str = "raw", value_width: int = 1) -> List[float]:
+        """Modeled per-destination message size at each down layer (Fig 5),
+        post-encoding when ``wire`` != "raw"."""
+        check_wire(wire)
         counts = self.expected_counts(n0, total_range)
-        return [counts[l] / self.degrees[l] * bytes_per_entry
+        bpe = self._layer_entry_bytes(bytes_per_entry, wire, value_width)
+        return [counts[l] / self.degrees[l] * bpe[l]
                 for l in range(self.depth)]
 
     # -- cost model (Fig 6) --------------------------------------------------------
     def modeled_time(self, n0: float, total_range: float,
                      fabric: Fabric = EC2_2013, bytes_per_entry: float = 12.0,
                      merge_ns_per_entry: float = 4.0,
-                     serial_nic: bool = True) -> float:
-        """End-to-end modeled config+reduce time (s) for one allreduce."""
+                     serial_nic: bool = True, wire: str = "raw",
+                     value_width: int = 1) -> float:
+        """End-to-end modeled config+reduce time (s) for one allreduce.
+
+        ``wire`` prices the *encoded* payload (delta index packing shrinks
+        the per-entry bytes layer by layer; lossy value modes narrow the
+        value stream; int8ef adds one scale word per message).  Stage
+        times — and thus the fabric's packet floor — are computed from the
+        post-encoding sizes, so compression can push a message under the
+        floor and stop paying bandwidth for it.  ``wire="raw"`` reproduces
+        the original model exactly.
+        """
+        check_wire(wire)
         counts = self.expected_counts(n0, total_range)
+        bpe = self._layer_entry_bytes(bytes_per_entry, wire, value_width)
+        scale_overhead = 4.0 if wire == "delta+int8ef" else 0.0
         t = 0.0
         for l, k in enumerate(self.degrees):
-            down_bytes = counts[l] / k * bytes_per_entry
+            down_bytes = counts[l] / k * bpe[l] + scale_overhead
             t += fabric.stage_time(down_bytes, k - 1, serial=serial_nic)
             # received k-1 buckets + own; merge cost ~ entries * log2(k)
             t += counts[l] * max(math.log2(k), 1.0) * merge_ns_per_entry * 1e-9
@@ -160,7 +232,7 @@ class ButterflyPlan:
             k = self.degrees[l]
             # Each node returns to each peer only the piece that peer asked
             # for (~ what the peer sent down): counts[l]/k entries, values only.
-            up_bytes = counts[l] / k * bytes_per_entry
+            up_bytes = counts[l] / k * bpe[l] + scale_overhead
             t += fabric.stage_time(up_bytes, k - 1, serial=serial_nic)
         return t
 
@@ -216,7 +288,8 @@ def num_prime_factors(m: int) -> int:
 
 def tune(num_nodes: int, n0: float, total_range: float,
          fabric: Fabric = EC2_2013, bytes_per_entry: float = 12.0,
-         serial_nic: bool = True, top: int = 0, max_depth: int = 6):
+         serial_nic: bool = True, top: int = 0, max_depth: int = 6,
+         wire: str = "raw", value_width: int = 1):
     """Rank all degree sequences by modeled time; return best (or top-n list).
 
     Model assumptions (documented, not measured — for a *calibrated* sweep
@@ -254,12 +327,14 @@ def tune(num_nodes: int, n0: float, total_range: float,
             f"tune(num_nodes={num_nodes}): prime node count has no "
             f"nontrivial factorization — falling back to the flat "
             f"round-robin plan ({num_nodes},)", UserWarning, stacklevel=2)
+    check_wire(wire)
     scored = []
     for degs in facs:
         plan = ButterflyPlan(num_nodes, degs)
         scored.append((plan.modeled_time(n0, total_range, fabric,
                                          bytes_per_entry,
-                                         serial_nic=serial_nic), plan))
+                                         serial_nic=serial_nic, wire=wire,
+                                         value_width=value_width), plan))
     scored.sort(key=lambda x: x[0])
     if top:
         return scored[:top]

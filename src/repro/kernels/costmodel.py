@@ -19,6 +19,12 @@ time (which is meaningless off-TPU):
 frontier counts come from the very edge tables the banded kernel prefetches
 (``rank_merge.rank_tile_stats``), and the scatter counts are the static
 grid shapes of the kernels in ``onehot_scatter``.
+
+``wire_bytes_report`` prices the *on-wire* side of a layer under the
+``wire=`` codecs (``kernels.wirecodec``): exact encoded index+value bytes
+per stage row, dtype-aware, with the fabric's packet floor applied to the
+post-compression size — the byte model the autotuner re-ranks degree
+factorizations under.
 """
 from __future__ import annotations
 
@@ -110,3 +116,34 @@ def merge_tile_report(idx, out_capacity: int, *, mode: str, width: int = 1,
                 sc["inner_tiles_per_out_tile"],
             "scatter_tiles": sc["tiles"],
             "flops": rank_flops + sc["mxu_flops"]}
+
+
+def wire_bytes_report(cap: int, index_bits: int, *, wire: str = "raw",
+                      value_width: int = 1, fabric=None,
+                      fanout: int = 1) -> dict:
+    """Encoded on-wire cost of one stage row of ``cap`` entries.
+
+    ``index_bits`` is the stage's static offset width
+    (``wirecodec.stage_index_bits``); raw ignores it and ships 32-bit
+    indices.  Returns exact byte counts (bit-packed index words + value
+    stream + the int8ef row scale), the compression ratio vs raw, and —
+    when a :class:`repro.core.netmodel.Fabric` is given — the modeled
+    message time with the packet floor applied to the *post-compression*
+    size (the floor lives inside ``Fabric.msg_time`` and is applied
+    exactly once, there).
+    """
+    from repro.core.topology import check_wire
+    from .wirecodec import encoded_payload_bytes
+    check_wire(wire)
+    raw = encoded_payload_bytes("raw", cap, 32, value_width)
+    enc = encoded_payload_bytes(wire, cap, index_bits, value_width)
+    rep = {"wire": wire, "cap": cap,
+           "index_bits": 32 if wire == "raw" else index_bits,
+           "value_width": value_width,
+           "raw_bytes": raw, "encoded_bytes": enc,
+           "compression": raw / enc}
+    if fabric is not None:
+        rep["msg_time_s"] = fabric.msg_time(float(enc), fanout)
+        rep["raw_msg_time_s"] = fabric.msg_time(float(raw), fanout)
+        rep["floor_bound"] = float(enc) < float(fabric.floor_bytes)
+    return rep

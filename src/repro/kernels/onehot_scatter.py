@@ -55,15 +55,40 @@ def _kernel(pos_ref, val_ref, out_ref, *, bm: int, bk: int):
         preferred_element_type=jnp.float32)
 
 
+def _scaled_kernel(pos_ref, scale_ref, val_ref, out_ref, *, bm: int, bk: int):
+    # Wire-decode fusion: val arrives in its on-wire dtype (int8/bf16) and
+    # is dequantized in-register — scale_ref [bk] is the per-source-row
+    # quantization scale — so the widened f32 form never touches HBM.
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pos = pos_ref[...]                                   # [bk] int32
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bk, bm), 1)
+    onehot = (pos[:, None] == rows).astype(jnp.float32)  # [bk, bm]
+    v = val_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("num_rows", "bm", "bn", "bk", "interpret"))
 def onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
-                       *, bm: int = BM, bn: int = BN, bk: int = BK,
+                       *, scale: jax.Array | None = None,
+                       bm: int = BM, bn: int = BN, bk: int = BK,
                        interpret: bool = True) -> jax.Array:
     """out[num_rows, W] = scatter-add of val [C, W] at rows pos [C].
 
     Out-of-range pos (e.g. drop bins, padding parked at num_rows) fall off
     every one-hot tile and vanish — free drop semantics.
+
+    ``scale`` [C] f32, when given, multiplies each source row in-register
+    before the one-hot matmul — the fused dequantization hook for the
+    int8 wire format (``val`` stays in its on-wire dtype end to end).
     """
     c, w = val.shape
     # pad to tile multiples
@@ -74,19 +99,29 @@ def onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
     val_p = jnp.zeros((cp, wp), val.dtype).at[:c, :w].set(val)
 
     grid = (rp // bm, wp // bn, cp // bk)
+    pos_spec = pl.BlockSpec((bk,), lambda i, j, k: (k,))
+    val_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    if scale is None:
+        kernel = functools.partial(_kernel, bm=bm, bk=bk)
+        in_specs = [pos_spec, val_spec]
+        operands = (pos_p, val_p)
+    else:
+        kernel = functools.partial(_scaled_kernel, bm=bm, bk=bk)
+        in_specs = [pos_spec, pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+                    val_spec]
+        scale_p = jnp.zeros((cp,), jnp.float32).at[:c].set(
+            scale.astype(jnp.float32))
+        operands = (pos_p, scale_p, val_p)
     out = pl.pallas_call(
-        functools.partial(_kernel, bm=bm, bk=bk),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.float32),
         compiler_params=CompilerParams(dimension_semantics=("parallel", "parallel",
                                        "arbitrary")),
         interpret=interpret,
-    )(pos_p, val_p)
+    )(*operands)
     return out[:num_rows, :w]
 
 
@@ -118,10 +153,30 @@ def _banded_kernel(starts_ref, pos_ref, val_ref, out_ref, *, bm: int, bk: int):
         preferred_element_type=jnp.float32)
 
 
+def _banded_scaled_kernel(starts_ref, pos_ref, scale_ref, val_ref, out_ref,
+                          *, bm: int, bk: int):
+    # Banded twin of _scaled_kernel: fused per-source-row dequantization.
+    i = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pos = pos_ref[...]                                   # [bk] int32
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bk, bm), 1)
+    onehot = (pos[:, None] == rows).astype(jnp.float32)  # [bk, bm]
+    v = val_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("num_rows", "band", "bm", "bn",
                                              "bk", "interpret"))
 def banded_onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
-                              *, band: int, bm: int = BM, bn: int = BN,
+                              *, band: int, scale: jax.Array | None = None,
+                              bm: int = BM, bn: int = BN,
                               bk: int = BK, interpret: bool = True
                               ) -> jax.Array:
     """Band-limited scatter-add: requires ``pos`` non-decreasing with at most
@@ -135,6 +190,9 @@ def banded_onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
     Out-of-window rows load but never match the one-hot row range, and the
     window provably covers every in-range source, so the result is exactly
     ``onehot_scatter_add(pos, val, num_rows)``.
+
+    ``scale`` [C] f32: fused per-source-row dequantization, as in
+    :func:`onehot_scatter_add` (pad rows carry scale 0).
     """
     c, w = val.shape
     kb = band_inner_tiles(band, bm, bk)
@@ -159,21 +217,32 @@ def banded_onehot_scatter_add(pos: jax.Array, val: jax.Array, num_rows: int,
                          jnp.int32(cpad // bk - kb))
 
     grid = (n_out_tiles, wp // bn, kb)
+    pos_spec = pl.BlockSpec((bk,), lambda i, j, t, s: (s[i] + t,))
+    val_spec = pl.BlockSpec((bk, bn), lambda i, j, t, s: (s[i] + t, j))
+    if scale is None:
+        kernel = functools.partial(_banded_kernel, bm=bm, bk=bk)
+        in_specs = [pos_spec, val_spec]
+        operands = (starts, pos_p, val_p)
+    else:
+        kernel = functools.partial(_banded_scaled_kernel, bm=bm, bk=bk)
+        in_specs = [pos_spec,
+                    pl.BlockSpec((bk,), lambda i, j, t, s: (s[i] + t,)),
+                    val_spec]
+        scale_p = jnp.zeros((cpad,), jnp.float32).at[:c].set(
+            scale.astype(jnp.float32))
+        operands = (starts, pos_p, scale_p, val_p)
     grid_spec = PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bk,), lambda i, j, t, s: (s[i] + t,)),
-            pl.BlockSpec((bk, bn), lambda i, j, t, s: (s[i] + t, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t, s: (i, j)),
     )
     out = pl.pallas_call(
-        functools.partial(_banded_kernel, bm=bm, bk=bk),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.float32),
         compiler_params=CompilerParams(dimension_semantics=("parallel", "parallel",
                                        "arbitrary")),
         interpret=interpret,
-    )(starts, pos_p, val_p)
+    )(*operands)
     return out[:num_rows, :w]

@@ -47,7 +47,9 @@ def _compact_positions(idx: jax.Array, out_capacity: int):
 
 def _compact_scatter_add(merged_idx: jax.Array, ranks: Optional[jax.Array],
                          val: jax.Array, out_capacity: int,
-                         mode: str = "fused", band: Optional[int] = None
+                         mode: str = "fused", band: Optional[int] = None,
+                         scale: Optional[jax.Array] = None,
+                         out_dtype=None
                          ) -> Tuple[SparseChunk, jax.Array]:
     """Shared tail of every compact pipeline: scatter the head index of each
     duplicate group, then coalesce values with a single one-hot MXU matmul.
@@ -64,8 +66,14 @@ def _compact_scatter_add(merged_idx: jax.Array, ranks: Optional[jax.Array],
     ``pos`` non-decreasing with multiplicity <= ``band``, which lets the
     band-limited kernel visit only ceil(band*bm/bk)+1 input tiles per
     output tile.  Returns ``(chunk, n_unique)``.
+
+    ``scale`` [C] f32: per-source-row dequantization factor fused into the
+    one-hot matmul (wire-decode path — ``val`` stays in its on-wire dtype).
+    ``out_dtype`` overrides the output value dtype (default: ``val``'s own
+    dtype; a fused decode wants the compute dtype instead).
     """
     _check_mode(mode)
+    out_dtype = out_dtype if out_dtype is not None else val.dtype
     pos, is_head = _compact_positions(merged_idx, out_capacity)
     out_idx = jnp.full((out_capacity,), SENTINEL, jnp.uint32)
     out_idx = out_idx.at[jnp.where(is_head, pos, out_capacity)].set(
@@ -76,13 +84,15 @@ def _compact_scatter_add(merged_idx: jax.Array, ranks: Optional[jax.Array],
             raise ValueError("banded mode needs a source-multiplicity bound")
         if ranks is not None:                    # permute into merge order
             v2 = jnp.zeros_like(v2).at[ranks].set(v2)
+            if scale is not None:
+                scale = jnp.zeros_like(scale).at[ranks].set(scale)
         out_val = banded_onehot_scatter_add(
-            pos, v2, out_capacity, band=band,
-            interpret=INTERPRET).astype(val.dtype)
+            pos, v2, out_capacity, band=band, scale=scale,
+            interpret=INTERPRET).astype(out_dtype)
     else:
         final_pos = pos if ranks is None else pos[ranks]
-        out_val = onehot_scatter_add(final_pos, v2, out_capacity,
-                                     interpret=INTERPRET).astype(val.dtype)
+        out_val = onehot_scatter_add(final_pos, v2, out_capacity, scale=scale,
+                                     interpret=INTERPRET).astype(out_dtype)
     if val.ndim == 1:
         out_val = out_val[:, 0]
     return (SparseChunk(idx=out_idx, val=out_val),
@@ -137,7 +147,9 @@ def merge_add(a: SparseChunk, b: SparseChunk,
 
 
 def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int,
-                      mode: str = "fused") -> Tuple[SparseChunk, jax.Array]:
+                      mode: str = "fused",
+                      row_scale: Optional[jax.Array] = None,
+                      out_dtype=None) -> Tuple[SparseChunk, jax.Array]:
     """Fused k-way merge: rank-merge sorted runs, compact duplicate indices,
     and scatter-add the values in one pass (no full re-sort).
 
@@ -169,6 +181,12 @@ def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int,
     concatenation: ``overflow`` counts unique indices beyond
     ``out_capacity`` (dropped).  Sentinel padding sorts to the tail and is
     dropped by the compact step automatically.
+
+    ``row_scale`` [k] f32: per-run dequantization scale (the int8 wire
+    format ships one scale per all_to_all row); it is broadcast per entry
+    and fused into the scatter-add kernel, so quantized values are widened
+    only in-register.  ``out_dtype`` sets the output value dtype (wire
+    decodes pass the compute dtype; default keeps ``val``'s dtype).
     """
     _check_mode(mode)
     banded = mode == "banded"
@@ -186,9 +204,12 @@ def merge_sorted_runs(idx: jax.Array, val: jax.Array, out_capacity: int,
     rank = jnp.stack(ranks).reshape((total,))        # bijection on [0, total)
     flat_idx = idx.reshape((total,))
     merged_idx = jnp.zeros((total,), jnp.uint32).at[rank].set(flat_idx)
+    scale = None
+    if row_scale is not None:
+        scale = jnp.repeat(row_scale.astype(jnp.float32), cap)
     out, n_unique = _compact_scatter_add(
         merged_idx, rank, val.reshape((total,) + val.shape[2:]), out_capacity,
-        mode=mode, band=k)
+        mode=mode, band=k, scale=scale, out_dtype=out_dtype)
     return out, jnp.maximum(n_unique - out_capacity, 0)
 
 

@@ -1,0 +1,180 @@
+"""Compressed wire codecs for the union-path butterfly stages.
+
+The paper's throughput argument (§IV) is entirely about bytes-on-wire per
+stage, yet the raw union path ships 4-byte uint32 indices and 4-byte fp32
+values through every ``all_to_all`` / ``all_gather``.  This module is the
+device-side half of the ``wire=`` knob on :class:`repro.core.api
+.SparseAllreduce` (model-side pricing: ``topology.wire_entry_bytes``):
+
+* **Index stream ("delta" family)** — every stage payload is a sorted run
+  confined to one contiguous subrange of the hashed space, and both ends
+  of the wire know the subrange base (receiver j of a down-stage exchange
+  owns bucket subrange j; up-stage gather row t covers subrange t).  So
+  indices travel as *offsets from the range base*, bit-packed at the
+  static per-stage width ``ceil(log2(max_span + 1))`` — the width shrinks
+  by ``log2(k)`` bits per layer as the butterfly narrows the range.  SPMD
+  static shapes rule out true variable-length gap coding, so this is the
+  static-shape adaptation of delta coding: delta against the run base at
+  the worst-case-gap width, exactly lossless.  The all-ones offset is the
+  SENTINEL marker (``width`` is sized so real offsets never reach it),
+  which lets packed rows carry interleaved padding with no count header.
+* **Value stream** — ``delta`` keeps fp32 values (bit-identical to
+  ``raw``); ``delta+bf16`` ships bfloat16 (the merge kernels consume it
+  natively and accumulate in f32 in-register); ``delta+int8ef`` ships
+  per-row-scaled int8 whose dequantization is *fused into the one-hot
+  scatter kernels* (``ops.merge_sorted_runs(row_scale=...)``) — the
+  packed payload is never widened on the wire path, and the train-step
+  error-feedback carry (``train/step.py``) compensates the quantization
+  residual across steps.
+
+Everything here is shape-static: widths, word counts and group strides are
+host-side ints derived from the :class:`~repro.core.allreduce.DevicePlan`,
+so the packed buffers trace into fixed-shape collectives.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_vec import SENTINEL
+from repro.core.topology import WIRE_MODES, check_wire  # noqa: F401  (re-export)
+
+# Wire modes whose value stream loses precision (need bounded-error tests,
+# refused by the planned reduce path).
+LOSSY_WIRE = ("delta+bf16", "delta+int8ef")
+
+
+# ---------------------------------------------------------------------------
+# Host-side static metadata from the device plan
+# ---------------------------------------------------------------------------
+
+def stage_index_bits(plan) -> Tuple[int, ...]:
+    """Per-stage offset width in bits: ``ceil(log2(max_span + 1))`` over the
+    stage-l subrange spans of every node (host ints; the +1 reserves the
+    all-ones marker for SENTINEL padding)."""
+    bits = []
+    for l in range(len(plan.stages)):
+        e = plan.logical.all_edges(l)                    # [M, k+1] int64
+        span = int(np.max(e[:, 1:] - e[:, :-1]))
+        bits.append(max(1, min(32, int(math.ceil(math.log2(span + 1))))))
+    return tuple(bits)
+
+
+def stage_strides(plan) -> Tuple[int, ...]:
+    """Per-stage mixed-radix stride *within the stage's mesh axis*: the
+    position of a device in its stage-l group is
+    ``(axis_index // stride_l) % degree_l`` (digit l of the axis index,
+    most-significant first — matches ``ButterflyPlan.group_members``)."""
+    per_axis: dict = {}
+    for st in plan.stages:
+        per_axis.setdefault(st.axis_name, []).append(st.degree)
+    pos = {a: 0 for a in per_axis}
+    out = []
+    for st in plan.stages:
+        ds = per_axis[st.axis_name]
+        i = pos[st.axis_name]
+        pos[st.axis_name] += 1
+        out.append(int(np.prod(ds[i + 1:], dtype=np.int64)) if ds[i + 1:]
+                   else 1)
+    return tuple(out)
+
+
+def index_words(cap: int, width: int) -> int:
+    """uint32 words holding ``cap`` offsets of ``width`` bits each."""
+    return max(1, -(-(cap * width) // 32))
+
+
+def encoded_payload_bytes(wire: str, cap: int, index_bits: int,
+                          width: int = 1) -> int:
+    """Exact on-wire bytes of one encoded [cap(, width)] stage row
+    (index words + value stream + the int8ef per-row scale).  This is what
+    the packet floor applies to — *post*-compression sizes."""
+    check_wire(wire)
+    if wire == "raw":
+        return cap * (4 + 4 * width)
+    nbytes = 4 * index_words(cap, index_bits)
+    nbytes += cap * width * {"delta": 4, "delta+bf16": 2,
+                             "delta+int8ef": 1}[wire]
+    if wire == "delta+int8ef":
+        nbytes += 4                                     # f32 row scale
+    return nbytes
+
+
+# ---------------------------------------------------------------------------
+# Index stream: offset-from-base bit packing (traced, uint32-only)
+# ---------------------------------------------------------------------------
+
+def pack_indices(idx: jax.Array, base: jax.Array,  # analysis: hot
+                 width: int) -> jax.Array:
+    """Pack sorted uint32 rows [R, cap] into offset words [R, n_words].
+
+    ``base`` [R] uint32 is each row's subrange start; SENTINEL entries
+    become the all-ones marker.  Entry i occupies bits
+    [i*width, (i+1)*width) little-endian; word spills use a double shift
+    (no shift-by-32) and land via disjoint-bit scatter-adds (== OR).
+    """
+    r, cap = idx.shape
+    nw = index_words(cap, width)
+    marker = jnp.uint32((1 << width) - 1)
+    offs = jnp.where(idx == jnp.uint32(SENTINEL), marker,
+                     idx - base[:, None].astype(jnp.uint32))
+    # host-static bit layout (cap/width are Python ints)
+    bitpos = np.arange(cap, dtype=np.int64) * width  # noqa: RA202
+    word = jnp.asarray((bitpos // 32).astype(np.int32))
+    shift = jnp.asarray((bitpos % 32).astype(np.uint32))
+    lo = offs << shift
+    hi = (offs >> (jnp.uint32(31) - shift)) >> jnp.uint32(1)
+    words = jnp.zeros((r, nw), jnp.uint32)
+    words = words.at[:, word].add(lo, mode="drop")
+    words = words.at[:, word + 1].add(hi, mode="drop")
+    return words
+
+
+def unpack_indices(words: jax.Array, base: jax.Array,  # analysis: hot
+                   cap: int, width: int) -> jax.Array:
+    """Inverse of :func:`pack_indices`: words [R, n_words] + ``base`` [R]
+    -> uint32 [R, cap] with marker offsets restored to SENTINEL."""
+    r, nw = words.shape
+    marker = jnp.uint32((1 << width) - 1)
+    # host-static bit layout + gather coordinates (cap/width Python ints)
+    bitpos = np.arange(cap, dtype=np.int64) * width  # noqa: RA202
+    word = (bitpos // 32).astype(np.int32)
+    shift = jnp.asarray((bitpos % 32).astype(np.uint32))
+    w_lo = words[:, word]
+    w_hi = words[:, np.minimum(word + 1, nw - 1)]  # noqa: RA202
+    lo = w_lo >> shift
+    hi = (w_hi << (jnp.uint32(31) - shift)) << jnp.uint32(1)
+    offs = (lo | hi) & marker
+    return jnp.where(offs == marker, jnp.uint32(SENTINEL),
+                     base[:, None].astype(jnp.uint32) + offs)
+
+
+# ---------------------------------------------------------------------------
+# Value stream: per-row int8 quantization (bf16 is a plain astype)
+# ---------------------------------------------------------------------------
+
+def quant8_rows(val: jax.Array) -> Tuple[jax.Array, jax.Array]:  # analysis: hot
+    """Per-row symmetric int8 quantization of [R, ...] values.
+
+    Returns ``(q int8 [R, ...], scale f32 [R])`` with
+    ``scale = max|row| / 127`` — the wire payload of ``delta+int8ef``
+    (the scale travels alongside, one f32 per row).
+    """
+    red = tuple(range(1, val.ndim))
+    amax = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=red)
+    scale = jnp.maximum(amax / 127.0, jnp.float32(1e-30))
+    s = scale.reshape((-1,) + (1,) * (val.ndim - 1))
+    q = jnp.clip(jnp.round(val.astype(jnp.float32) / s),
+                 -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequant8_rows(q: jax.Array, scale: jax.Array) -> jax.Array:  # analysis: hot
+    """Inverse of :func:`quant8_rows` (jnp path; the kernel path fuses this
+    multiply into the one-hot scatter via ``row_scale``)."""
+    s = scale.astype(jnp.float32).reshape((-1,) + (1,) * (q.ndim - 1))
+    return q.astype(jnp.float32) * s

@@ -92,6 +92,15 @@ def main(argv=None):
                     help="per-butterfly-layer merge for sparse sync: full "
                          "re-sort, the fused Pallas rank-merge pipeline, or "
                          "its band-limited (near-linear tile work) variant")
+    ap.add_argument("--wire", default="raw",
+                    choices=["raw", "delta", "delta+bf16", "delta+int8ef"],
+                    help="on-wire payload encoding for sparse sync "
+                         "(repro.kernels.wirecodec): 'delta' bit-packs the "
+                         "sorted index stream (bit-identical results); "
+                         "'delta+bf16' / 'delta+int8ef' additionally "
+                         "quantize values, the latter with an error-"
+                         "feedback carry re-injected each step; requires "
+                         "--sync sparse for non-raw values")
     ap.add_argument("--replication", type=int, default=1,
                     help="r-way replicated data parallelism (paper SV fault "
                          "tolerance): the data axis hosts dp/r logical batch "
@@ -142,7 +151,7 @@ def main(argv=None):
                               dp_degrees=dp_degrees,
                               sparse_tokens_hint=max(
                                   8, args.batch * args.seq // dsize),
-                              sync_merge=args.merge,
+                              sync_merge=args.merge, sync_wire=args.wire,
                               replication=args.replication, dead=dead,
                               retune=args.retune)
     params = T.init_params(cfg, mc.tp, seed=args.seed)

@@ -139,14 +139,29 @@ def _hier_allreduce_leaf(g: jax.Array, plan: DevicePlan) -> jax.Array:
 
 def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
                      dplan: DevicePlan, edges: Sequence[jax.Array],
-                     merge: str = "sort"
-                     ) -> Tuple[jax.Array, jax.Array]:
+                     merge: str = "sort", wire: str = "raw",
+                     ef: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
     """Sparse Allreduce of a row-sparse gradient table over the data axes.
 
     grad: [V_local, d] this device's vocab-shard gradient (model-sharded).
     ids:  [N] global token ids appearing in the local batch.
-    Returns (synced grad, overflow count).  config+reduce fused — dynamic
-    indices, the paper's mini-batch mode.
+    Returns (synced grad, overflow count, new error-feedback carry).
+    config+reduce fused — dynamic indices, the paper's mini-batch mode.
+
+    ``wire`` selects the on-wire payload encoding of the union butterfly
+    (``repro.kernels.wirecodec``; ``"delta"`` is bit-identical to raw).
+    ``ef`` [V_local, d] f32 is this device's error-feedback carry for
+    ``wire="delta+int8ef"``: it is added to the rows *sent* this step, and
+    the residual of quantizing the sent payload is stored back, so the
+    quantization error of each step's contribution is re-injected (not
+    lost) on the next step.  The residual uses one per-row int8
+    quantization of the sender payload — a bounded proxy for the per-stage
+    re-quantization the payload actually undergoes inside the butterfly
+    (each stage's merge re-quantizes, so the true end-to-end error is a
+    sum of per-stage residuals; carrying the first hop's residual already
+    removes the sender-side bias, which dominates).  The returned carry is
+    ``None`` when ``ef`` is None.
     """
     v_l, d = grad.shape
     v_start = lax.axis_index(mc.tp_axis) * v_l
@@ -168,14 +183,25 @@ def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
     okr = uniq != jnp.uint32(SENTINEL)
     safe_rows = jnp.clip(rows, 0, v_l - 1)
     vals = grad[safe_rows].astype(jnp.float32) * okr[:, None]
+    new_ef = None
+    if ef is not None:
+        vals = vals + ef[safe_rows].astype(jnp.float32) * okr[:, None]
+        from repro.kernels.wirecodec import dequant8_rows, quant8_rows
+        q, s = quant8_rows(vals)
+        resid = (vals - dequant8_rows(q, s)) * okr[:, None]
+        ef_dest = jnp.where(okr, safe_rows, v_l)
+        new_ef = (jnp.zeros((v_l + 1, d), jnp.float32)
+                  .at[:v_l].set(ef.astype(jnp.float32))
+                  .at[ef_dest].set(resid, mode="drop")[:v_l])
     chunk, ovf = sparse_allreduce_union(
-        SparseChunk(idx=uniq, val=vals), dplan, edges, merge=merge)
+        SparseChunk(idx=uniq, val=vals), dplan, edges, merge=merge,
+        wire=wire)
     out_rows = (SYNC_PERM.inv(chunk.idx).astype(jnp.int32) - v_start)
     ok = chunk.idx != jnp.uint32(SENTINEL)
     dest = jnp.where(ok, out_rows, v_l)
     synced = jnp.zeros((v_l + 1, d), jnp.float32).at[dest].set(
         chunk.val * ok[:, None], mode="drop")[:-1]
-    return synced.astype(grad.dtype), ovf
+    return synced.astype(grad.dtype), ovf, new_ef
 
 
 def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
@@ -183,8 +209,11 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
                sparse_plan: Optional[DevicePlan],
                sparse_edges, token_ids,
                merge: str = "sort",
+               wire: str = "raw",
+               ef: Optional[jax.Array] = None,
                repl_weight: Optional[jax.Array] = None,
-               dp_logical: Optional[int] = None) -> Tuple[Any, jax.Array]:
+               dp_logical: Optional[int] = None
+               ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
     """Combine per-device grads into the grad of the global mean loss.
 
     ``repl_weight`` (r-way replicated data parallelism, paper §V): this
@@ -193,21 +222,30 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
     before the data-axis sum counts each logical shard exactly once — from
     its first alive replica — and the mean divides by ``dp_logical``
     (= dp / r) instead of dp.
+
+    ``wire`` / ``ef`` thread the sparse leaf's on-wire encoding and
+    error-feedback carry (:func:`sparse_sync_rows`); the updated carry is
+    returned as the third element (``ef`` unchanged when the sparse leaf
+    was not synced this step, ``None`` when error feedback is off).
     """
     spec = full_model_spec_tuples(cfg, mc.tp)
     dp = float(dp_logical if dp_logical is not None else mc.dp)
     overflow = jnp.zeros((), jnp.int32)
+    new_ef = ef
 
     def leaf_sync(path, g, s):
-        nonlocal overflow
+        nonlocal overflow, new_ef
         if cfg.fsdp and any(d == "fsdp" for d in s):
             return g / dp          # transpose already summed over data
         if repl_weight is not None:
             g = g * repl_weight.astype(g.dtype)
         if mode == "sparse" and path == ("emb",) and not cfg.tie_embeddings:
-            synced, ovf = sparse_sync_rows(
-                g, token_ids, mc, sparse_plan, sparse_edges, merge=merge)
+            synced, ovf, nef = sparse_sync_rows(
+                g, token_ids, mc, sparse_plan, sparse_edges, merge=merge,
+                wire=wire, ef=ef)
             overflow = overflow + ovf
+            if nef is not None:
+                new_ef = nef
             return synced / dp
         if mode in ("hier", "sparse") and hier_plan is not None and g.size >= mc.dp:
             return _hier_allreduce_leaf(g, hier_plan) / dp
@@ -219,7 +257,7 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
     flat = _flatten_with_path(grads)
     sflat = dict(_flatten_with_path(spec))
     synced = [(p, leaf_sync(p, g, sflat[p])) for p, g in flat]
-    return _unflatten_from_path(grads, synced), overflow
+    return _unflatten_from_path(grads, synced), overflow, new_ef
 
 
 def _flatten_with_path(tree, prefix=()):
@@ -322,6 +360,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     microbatch: int = 1,
                     sparse_tokens_hint: Optional[int] = None,
                     sync_merge: str = "sort",
+                    sync_wire: str = "raw",
                     replication: int = 1,
                     dead: Optional[set] = None,
                     retune: bool = False):
@@ -341,6 +380,18 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     (core.allreduce docstring; "banded" is the band-limited Pallas
     pipeline with near-linear per-layer tile work).
 
+    ``sync_wire`` ("raw" | "delta" | "delta+bf16" | "delta+int8ef")
+    selects the on-wire payload encoding of that same sparse allreduce
+    (``repro.kernels.wirecodec``; sparse sync only — other modes raise).
+    ``"delta"`` bit-packs indices and is bit-identical to raw;
+    ``"delta+int8ef"`` additionally quantizes values to per-row int8 with
+    an *error-feedback carry*: the returned step fn transparently wraps
+    the optimizer state as ``{"adamw": opt_state, "ef": carry}`` on first
+    call (pass a bare AdamWState the first step; thereafter pass the dict
+    the step returned) and the per-device quantization residual is
+    re-injected into the next step's sent gradient
+    (:func:`sparse_sync_rows`).
+
     microbatch > 1 splits the per-device batch into that many accumulation
     steps (lax.scan) — bounds activation / MoE-dispatch memory; gradients
     are synced once per step, after accumulation (so the paper's allreduce
@@ -356,9 +407,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     Raises ``DeadLogicalNode`` otherwise (with r=1, on any failure).
     """
     from repro.core.allreduce import MERGE_MODES
+    from repro.core.topology import check_wire
     if sync_merge not in MERGE_MODES:
         raise ValueError(
             f"sync_merge must be one of {MERGE_MODES}, got {sync_merge!r}")
+    check_wire(sync_wire)
+    if sync_wire != "raw" and sync != "sparse":
+        raise ValueError(
+            f"sync_wire={sync_wire!r} only applies to the sparse sync path "
+            f"(got sync={sync!r}); ring/hier sync is dense and unencoded")
     mc = mesh_ctx(mesh)
     ax = mc.axis_ctx(cfg)
     opt = opt or AdamW()
@@ -400,7 +457,19 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
             in_capacity=cin, out_capacity=cout)
         sparse_edges = [jnp.asarray(e) for e in sparse_plan.edges_arrays()]
 
+    # int8ef error-feedback carry: per-device sender state over the vocab
+    # shard, [dp, V_pad, d] globally so every (data, model) device owns one
+    # [V_local, d] slab (leading dp dim = one carry per sender).
+    ef_shape = None
+    ef_spec = None
+    if sync == "sparse" and sync_wire == "delta+int8ef":
+        ef_shape = (mc.dp, T.padded_vocab(cfg, mc.tp), cfg.d_model)
+        ef_spec = P(mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0],
+                    "model", None)
+
     opt_pspec = AdamWState(step=P(), m=pspec, v=pspec)
+    if ef_spec is not None:
+        opt_pspec = {"adamw": opt_pspec, "ef": ef_spec}
     batch_specs = {"tokens": dspec, "labels": dspec}
     if cfg.img_tokens:
         batch_specs["img_embeds"] = dspec
@@ -411,6 +480,10 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
 
     def body(params, opt_state, batch, *edges):
         tokens, labels = batch["tokens"], batch["labels"]
+        ef = None
+        if ef_spec is not None:
+            ef = opt_state["ef"][0]          # local slab [V_local, d]
+            opt_state = opt_state["adamw"]
 
         def loss_fn(p, mb):
             loss, aux = T.forward_loss(
@@ -449,13 +522,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
             for a in mc.dp_axes:
                 flat = flat * mesh.shape[a] + lax.axis_index(a)
             repl_w = jnp.asarray(repl_weights)[flat]
-        grads, overflow = sync_grads(grads, cfg, mc, sync, hier_plan,
-                                     sparse_plan, edges, tokens,
-                                     merge=sync_merge, repl_weight=repl_w,
-                                     dp_logical=dp_logical)
+        grads, overflow, new_ef = sync_grads(
+            grads, cfg, mc, sync, hier_plan, sparse_plan, edges, tokens,
+            merge=sync_merge, wire=sync_wire, ef=ef, repl_weight=repl_w,
+            dp_logical=dp_logical)
         gnorm = _sharded_grad_norm(grads, cfg, mc)
         new_params, new_opt, _ = opt.update(grads, opt_state, params,
                                             gnorm=gnorm)
+        if ef_spec is not None:
+            new_opt = {"adamw": new_opt, "ef": new_ef[None]}
         metrics = {"loss": lax.pmean(loss, mc.dp_axes),
                    "aux": lax.pmean(aux, mc.dp_axes), "gnorm": gnorm,
                    "sync_overflow": overflow}
@@ -481,8 +556,21 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                        _ns(mesh, mspec)))
     if donate:
         jit_kw["donate_argnums"] = (0, 1)
-    return jax.jit(step, **jit_kw), dict(params=pspec, opt=opt_pspec,
-                                         batch=batch_specs)
+    jitted = jax.jit(step, **jit_kw)
+    specs = dict(params=pspec, opt=opt_pspec, batch=batch_specs)
+    if ef_shape is None:
+        return jitted, specs
+
+    def step_with_ef(params, opt_state, batch):
+        # Transparent first-call wrap: a bare optimizer state gets a zero
+        # error-feedback carry attached; thereafter callers pass the
+        # {"adamw": ..., "ef": ...} dict the step returned.
+        if not (isinstance(opt_state, dict) and "ef" in opt_state):
+            opt_state = {"adamw": opt_state,
+                         "ef": jnp.zeros(ef_shape, jnp.float32)}
+        return jitted(params, opt_state, batch)
+
+    return step_with_ef, specs
 
 
 def _ns(mesh: Mesh, spec_tree):

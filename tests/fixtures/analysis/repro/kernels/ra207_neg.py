@@ -1,0 +1,19 @@
+"""Fixture: RA207 negative — near-miss casts that must stay clean."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def decode(packed, base, val, scale):
+    b = base.astype(jnp.uint32)          # decoded quantity, not a buffer
+    v = val.astype(jnp.float32)          # plain value widening is fine
+    s = scale.astype(jnp.float32)
+    narrow = packed.astype(jnp.int8)     # narrowing is the codec's job
+    half = packed.astype(jnp.bfloat16)   # < 4 bytes: still compressed
+    return b + v + s, narrow, half
+
+
+def host_decode(packed):
+    # cold (host-side) code may widen packed buffers freely — debugging,
+    # oracles and tests do this on purpose.
+    return packed.astype(jnp.float32)

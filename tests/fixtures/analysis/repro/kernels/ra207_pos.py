@@ -1,0 +1,15 @@
+"""Fixture: RA207 positive — widening casts on packed wire buffers."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def decode(packed, base, nw):
+    words = packed + 0
+    wide = words.astype(jnp.uint32)  # expect: RA207
+    vals = packed[:, 0].astype(jnp.float32)  # expect: RA207
+    named = packed.astype("float32")  # expect: RA207
+    wire_buf = words[:1]
+    kwarg = wire_buf.astype(dtype=jnp.int32)  # expect: RA207
+    ctor = jnp.float32(packed)  # expect: RA207
+    return wide + vals + named + kwarg + ctor

@@ -210,8 +210,28 @@ def test_cache_key_boundaries(cache):
     assert plan_cache_key(**{**base, "nnz": 1.05e5}) == k0    # same bucket
     for change in ({"nnz": 4e5}, {"merge": "banded"}, {"replication": 2},
                    {"width": 4}, {"fabric": GT}, {"serial_nic": False},
-                   {"mesh": (("data", 64),)}):
+                   {"mesh": (("data", 64),)}, {"wire": "delta"},
+                   {"wire": "delta+bf16"}):
         assert plan_cache_key(**{**base, **change}) != k0
+    # wire enters the key only when non-default: raw digests are stable
+    assert plan_cache_key(**{**base, "wire": "raw"}) == k0
+    assert "wire" not in plan_cache_key(**base)
+    assert plan_cache_key(**{**base, "wire": "delta"}) != \
+        plan_cache_key(**{**base, "wire": "delta+bf16"})
+
+
+def test_cache_keyed_per_wire_no_stale_hit(cache):
+    """A raw-tuned plan must never be served for a compressed wire format:
+    the byte models differ, so each wire tunes (and caches) separately."""
+    kw = dict(n0=12.1e6, total_range=60e6, fabric=GT, cache=cache)
+    d_raw, src_raw = resolve_degrees(64, **kw)
+    assert src_raw == "tuned"
+    d_bf16, src_bf16 = resolve_degrees(64, wire="delta+bf16", **kw)
+    assert src_bf16 == "tuned"          # cache miss, not a stale raw hit
+    assert cache.stats["stores"] == 2
+    # both entries hit independently on re-resolution
+    assert resolve_degrees(64, **kw) == (d_raw, "cache")
+    assert resolve_degrees(64, wire="delta+bf16", **kw) == (d_bf16, "cache")
 
 
 def test_resolve_degrees_rejects_bad_mesh_sig(cache):
@@ -363,6 +383,25 @@ def test_resolve_degrees_hits_across_subprocess_restart(tmp_path,
     degrees, src = resolve_degrees(64, n0=12.1e6, total_range=60e6)
     assert src == "cache" and math.prod(degrees) == 64
     assert f"{degrees}" in out             # same plan both processes
+
+
+def test_raw_tuned_plan_not_served_for_compressed_wire(tmp_path,
+                                                       monkeypatch):
+    """Stale-hit regression across a restart: a plan tuned under
+    ``wire="raw"`` in another process is NOT a cache hit for
+    ``wire="delta+bf16"`` — the encoded byte model re-tunes."""
+    out = _run(
+        "from repro.core.autotune import resolve_degrees\n"
+        "print(resolve_degrees(64, n0=12.1e6, total_range=60e6))\n",
+        _env(tmp_path, devices=1))
+    assert "tuned" in out
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "plans"))
+    degrees, src = resolve_degrees(64, n0=12.1e6, total_range=60e6,
+                                   wire="delta+bf16")
+    assert src == "tuned" and math.prod(degrees) == 64
+    # and the raw entry is still served to raw callers
+    _, src_raw = resolve_degrees(64, n0=12.1e6, total_range=60e6)
+    assert src_raw == "cache"
 
 
 CONFIG_CACHE_CODE = r"""

@@ -113,6 +113,21 @@ def test_tuning_doc_covers_cache_contract():
         assert needle in text, f"TUNING.md must mention {needle}"
 
 
+def test_wire_flag_declared_and_documented():
+    """The --wire knob is argparse-declared (so the flag lint accepts the
+    docs' mentions of it) and the tuning/architecture chapters cover the
+    wire formats: encode attach points, per-wire plan caching, and the
+    degree re-ranking it exists for."""
+    assert "--wire" in _declared_flags()
+    for doc, needles in (
+            ("TUNING.md", ("--wire", "delta+bf16", "re-rank")),
+            ("ARCHITECTURE.md", ("--wire", "repro.kernels.wirecodec",
+                                 "RA207"))):
+        text = _read(doc)
+        for needle in needles:
+            assert needle in text, f"{doc} must mention {needle}"
+
+
 def test_train_help_mentions_auto_and_engine():
     """The launcher's user-facing text must match reality: --dp-degrees
     documents the calibrated+cached 'auto' default (not the stale 'single

@@ -1,0 +1,265 @@
+"""Wire-format tests (paper §IV bytes-on-wire): codec round trips, exact
+encoded-byte accounting, the packet-floor boundary contract, the corrected
+calibration byte formula, and the device parity sweep — ``wire="delta"``
+bit-identical to ``"raw"`` across degrees x merge modes x replication,
+lossy modes within bounded error (subprocess: 16 forced host devices)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.netmodel import EC2_2013, Fabric
+from repro.core.topology import ButterflyPlan, check_wire, wire_entry_bytes
+from repro.kernels.wirecodec import (LOSSY_WIRE, encoded_payload_bytes,
+                                     index_words)
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=16",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src")
+            + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Codec round trips (host-side, no mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 3, 7, 13, 28, 31, 32])
+def test_pack_unpack_roundtrip_with_sentinels(width):
+    """Bit-packed offsets survive the round trip exactly at every width,
+    including interleaved SENTINEL padding (the all-ones marker)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import wirecodec as wc
+    rng = np.random.RandomState(width)
+    r, cap = 4, 37
+    base = rng.randint(0, 2 ** 31, size=r).astype(np.uint32)
+    span = (1 << width) - 1                     # marker value is reserved
+    offs = rng.randint(0, max(span, 1), size=(r, cap)).astype(np.uint64)
+    idx = (base[:, None].astype(np.uint64) + offs).astype(np.uint32)
+    idx.sort(axis=1)
+    mask = rng.rand(r, cap) < 0.3
+    idx = np.where(mask, np.uint32(0xFFFFFFFF), idx)
+    words = wc.pack_indices(jnp.asarray(idx), jnp.asarray(base), width)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (r, index_words(cap, width))
+    out = wc.unpack_indices(words, jnp.asarray(base), cap, width)
+    np.testing.assert_array_equal(np.asarray(out), idx)
+
+
+def test_quant8_roundtrip_bounded_and_zero_safe():
+    """Per-row int8 quantization: relative error <= 1/254 per row max, and
+    all-zero rows survive (scale clamp, no NaN/inf)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import wirecodec as wc
+    rng = np.random.RandomState(0)
+    val = rng.randn(5, 33).astype(np.float32) * 100.0
+    val[3] = 0.0
+    q, s = wc.quant8_rows(jnp.asarray(val))
+    assert q.dtype == jnp.int8 and s.shape == (5,)
+    back = np.asarray(wc.dequant8_rows(q, s))
+    assert np.isfinite(back).all()
+    np.testing.assert_array_equal(back[3], 0.0)
+    amax = np.abs(val).max(axis=1, keepdims=True)
+    assert (np.abs(back - val) <= amax / 254.0 + 1e-7).all()
+
+
+def test_encoded_payload_bytes_exact():
+    """The byte accounting is exact: index words + value stream + the
+    int8ef scale word; ``raw`` ships whole uint32/f32 words."""
+    cap, bits = 100, 13
+    words = -(-(cap * bits) // 32)
+    assert index_words(cap, bits) == words
+    assert encoded_payload_bytes("raw", cap, bits) == cap * 8
+    assert encoded_payload_bytes("delta", cap, bits) == 4 * words + cap * 4
+    assert encoded_payload_bytes("delta+bf16", cap, bits) == \
+        4 * words + cap * 2
+    assert encoded_payload_bytes("delta+int8ef", cap, bits) == \
+        4 * words + cap * 1 + 4
+    # vector values: W value lanes per entry, raw keeps index cost fixed
+    assert encoded_payload_bytes("raw", cap, bits, width=4) == cap * 20
+    assert encoded_payload_bytes("delta+bf16", cap, bits, width=4) == \
+        4 * words + cap * 2 * 4
+    with pytest.raises(ValueError):
+        encoded_payload_bytes("gzip", cap, bits)
+
+
+def test_wire_entry_bytes_model_matches_codec():
+    """The model-side per-entry pricing agrees with the exact codec bytes
+    in the large-cap limit (packing quantization amortizes away)."""
+    cap = 1 << 16
+    for wire in ("raw", "delta", "delta+bf16", "delta+int8ef"):
+        for bits in (9, 13, 21):
+            exact = encoded_payload_bytes(wire, cap, bits) / cap
+            model = wire_entry_bytes(wire, bits)
+            assert abs(exact - model) < 0.01, (wire, bits)
+    assert check_wire("raw") == "raw"
+    assert set(LOSSY_WIRE) == {"delta+bf16", "delta+int8ef"}
+
+
+def test_index_bits_per_layer_shrinks_with_depth():
+    """Modeled offset widths lose log2(k) bits per layer — the reason the
+    delta stream compresses harder as the butterfly narrows."""
+    bits = ButterflyPlan(64, (16, 2, 2)).index_bits_per_layer()
+    assert bits == [29, 28, 27]    # span 2^28, +1 reserves the marker
+
+
+# ---------------------------------------------------------------------------
+# Packet floor: applied exactly once, to post-encoding bytes (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_msg_time_floor_boundary():
+    """``msg_time`` is flat below ``floor_bytes`` and strictly increasing
+    above it; the boundary sample costs exactly the floor."""
+    f = Fabric("floor", beta_bytes_per_s=1e9, alpha_s=1e-3,
+               floor_bytes=4096.0)
+    at = f.msg_time(4096.0)
+    assert f.msg_time(4095.0) == at == f.msg_time(0.0)
+    assert f.msg_time(4097.0) > at
+    assert at == pytest.approx(1e-3 + 4096.0 / 1e9)
+    # applied once: stage_time must not re-floor (serial = fanout * one)
+    assert f.stage_time(4095.0, 3) == pytest.approx(3 * f.msg_time(4095.0, 3))
+
+
+def test_floor_prices_encoded_bytes():
+    """Compression can push a payload under the floor: the modeled stage
+    then stops paying bandwidth for the saved bytes (floor applied to the
+    *encoded* size, not the raw one)."""
+    from repro.kernels.costmodel import wire_bytes_report
+    cap, bits = 1024, 13
+    enc = encoded_payload_bytes("delta+bf16", cap, bits)
+    raw = encoded_payload_bytes("raw", cap, bits)
+    f = Fabric("floor", beta_bytes_per_s=1e9, alpha_s=1e-3,
+               floor_bytes=float(enc + 1))
+    rep = wire_bytes_report(cap, bits, wire="delta+bf16", fabric=f)
+    assert rep["floor_bound"] is True
+    assert rep["msg_time_s"] == pytest.approx(f.msg_time(enc))
+    assert rep["raw_msg_time_s"] == pytest.approx(f.msg_time(raw))
+    assert f.msg_time(enc) < f.msg_time(raw)
+
+
+# ---------------------------------------------------------------------------
+# Calibration byte accounting (satellite 1 regression, subprocess mesh)
+# ---------------------------------------------------------------------------
+
+CALIB_BYTES_CODE = r"""
+import numpy as np
+from repro.core.autotune import (STAGE_IDX_DTYPE, STAGE_VAL_DTYPE,
+                                 measure_stage_samples)
+
+assert STAGE_IDX_DTYPE.itemsize == 4 and STAGE_VAL_DTYPE.itemsize == 4
+samples = measure_stage_samples(payload_entries=(256, 1024), repeats=2)
+assert samples
+for s in samples:
+    entries = s.nbytes / (STAGE_IDX_DTYPE.itemsize + STAGE_VAL_DTYPE.itemsize)
+    assert entries in (256.0, 1024.0), (s.nbytes, entries)
+print("CALIB_BYTES_OK", sorted({s.nbytes for s in samples}))
+"""
+
+
+@pytest.mark.slow
+def test_measure_stage_samples_prices_index_and_value_stream():
+    """Regression: each staged exchange ships a uint32 index row AND an
+    fp32 value row — nbytes must be entries * 8, not the old fp32-only
+    entries * 4 (which under-counted every calibration fit 2x)."""
+    out = _run(CALIB_BYTES_CODE)
+    assert "CALIB_BYTES_OK [2048.0, 8192.0]" in out
+
+
+# ---------------------------------------------------------------------------
+# Device parity sweep (satellite 4): delta == raw bit-identically,
+# lossy modes bounded, across degrees x merge x replication
+# ---------------------------------------------------------------------------
+
+WIRE_PARITY_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.api import SparseAllreduce
+from repro.core.sparse_vec import HashPerm
+
+merge = "%(merge)s"
+DEVS = np.array(jax.devices())
+def mesh_of(n):
+    return jax.sharding.Mesh(DEVS[:n], ("nodes",))
+
+C = 24
+for degs in [(4,), (2, 2), (4, 2)]:
+    M = int(np.prod(degs))
+    rng = np.random.RandomState(M)
+    perm = HashPerm.make(M)
+    idx = np.full((M, C), 0xFFFFFFFF, np.uint32)
+    val = np.zeros((M, C), np.float32)
+    for n in range(M):
+        raw = rng.choice(400, rng.randint(8, C),
+                         replace=False).astype(np.uint32)
+        # dyadic-lattice values: fp32 sums are order-independent, so the
+        # delta wire can demand bit identity
+        v = (rng.randint(-128, 129, len(raw)) / 64.0).astype(np.float32)
+        h = perm.fwd_np(raw); o = np.argsort(h)
+        idx[n, :len(raw)] = h[o]; val[n, :len(raw)] = v[o]
+    base = SparseAllreduce(M, degs, backend="device", mesh=mesh_of(M),
+                           seed=M, merge=merge)
+    bi, bv, bovf = (np.asarray(x) for x in
+                    base.union_reduce(idx, val, out_capacity=M * C))
+    assert bovf.sum() == 0
+    ref_amax = max(float(np.abs(bv[bi != 0xFFFFFFFF]).max()), 1e-9)
+    for r in (1, 2):
+        for wire in ("delta", "delta+bf16", "delta+int8ef"):
+            ar = SparseAllreduce(M, degs, backend="device", replication=r,
+                                 mesh=mesh_of(M * r), seed=M, merge=merge,
+                                 wire=wire)
+            oi, ov, ovf = (np.asarray(x) for x in
+                           ar.union_reduce(idx, val, out_capacity=M * C))
+            assert ovf.sum() == 0, (degs, r, wire)
+            np.testing.assert_array_equal(oi, bi,
+                                          err_msg=f"{degs} r={r} {wire}")
+            if wire == "delta":
+                np.testing.assert_array_equal(ov, bv,
+                                              err_msg=f"{degs} r={r}")
+            else:
+                err = float(np.abs(ov - bv).max()) / ref_amax
+                assert err < 0.05, (degs, r, wire, err)
+print("WIRE_PARITY_OK_" + merge)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("merge", ["sort", "fused", "banded"])
+def test_union_wire_parity(merge):
+    """``wire="delta"`` is bit-identical to ``"raw"`` (indices and values)
+    across degrees x replication for every merge mode; the lossy modes
+    agree on indices and keep max-abs value error under 5%% of the union's
+    max magnitude (fixed seeds)."""
+    assert ("WIRE_PARITY_OK_" + merge) in _run(
+        WIRE_PARITY_CODE % {"merge": merge})
+
+
+# ---------------------------------------------------------------------------
+# API guards
+# ---------------------------------------------------------------------------
+
+def test_bad_wire_rejected_and_lossy_gated():
+    from repro.core.api import SparseAllreduce
+    with pytest.raises(ValueError, match="wire"):
+        SparseAllreduce(4, (4,), backend="sim", wire="zstd")
+    with pytest.raises(NotImplementedError):
+        SparseAllreduce(4, (4,), backend="sim", wire="delta+bf16")
+
+
+def test_train_step_wire_requires_sparse_sync():
+    """Non-raw sync_wire only applies to the sparse gradient sync — dense
+    ring/hier paths never encode, so asking is an error, not a no-op
+    (guards fire before any mesh work)."""
+    from repro.train.step import make_train_step
+    with pytest.raises(ValueError, match="sparse"):
+        make_train_step(None, None, sync="ring", sync_wire="delta")
+    with pytest.raises(ValueError, match="wire"):
+        make_train_step(None, None, sync="sparse", sync_wire="zstd")
