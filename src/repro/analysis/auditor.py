@@ -19,6 +19,13 @@ the invariants the stack's performance story rests on:
 * **dtype stability** — scan carries keep their dtypes across rounds
   (a widening carry re-allocates every round), and no float64 anywhere
   on device paths.
+* **overlap schedules are pure reorderings** — the bucketed stage-major
+  gradient sync moves exactly the sequential schedule's collective
+  multiset, 2·depth per bucket, interleaved stage-major with mirrored up
+  groups and zero barrier fences (:func:`audit_overlap_sync`); the
+  double-buffered engine keeps its per-round 2·depth budget with exactly
+  ``depth`` prologue collectives before the scan and ``depth`` epilogue
+  after (:func:`audit_engine` with ``overlap=True`` engines).
 
 Every audit returns a machine-readable
 :class:`~repro.analysis.violations.AuditReport`; ``tests/test_analysis.py``
@@ -47,6 +54,15 @@ FORBIDDEN_PRIMS = {
 
 # Primitives that open a sub-jaxpr we treat as "one dispatch region".
 _SCAN_PRIMS = {"scan"}
+
+# The dense butterfly's collective pair: psum_scatter lowers to
+# ``reduce_scatter`` on the way down, ``all_gather`` on the way up.
+_BUTTERFLY_PRIMS = ("reduce_scatter", "all_gather")
+
+# Scheduling fences.  A correct overlap schedule needs none: it is a pure
+# reordering of data-independent collectives, so any barrier in the traced
+# program means the schedule is forcing order instead of exposing it.
+_BARRIER_PRIMS = {"optimization_barrier"}
 
 
 def _sub_jaxprs(eqn) -> Iterator[Any]:
@@ -161,6 +177,55 @@ def trace_jaxpr(fn, *example_args):
     return jax.make_jaxpr(fn)(*example_args).jaxpr
 
 
+def butterfly_sequence(jaxpr) -> List[Tuple[str, str]]:
+    """Program-ordered ``(prim, group_signature)`` stream of the dense
+    butterfly collectives (``reduce_scatter`` / ``all_gather``).  The
+    signature is the repr of the equation's ``axis_index_groups`` — two
+    collectives share one iff they exchange within the same stage groups,
+    which is what identifies a butterfly stage in the lowered program.
+    ``iter_eqns`` recurses sub-jaxprs in place, so the stream preserves
+    issue order through pjit / shard_map wrappers."""
+    return [(eqn.primitive.name,
+             repr(eqn.params.get("axis_index_groups")))
+            for eqn, _ in iter_eqns(jaxpr)
+            if eqn.primitive.name in _BUTTERFLY_PRIMS]
+
+
+def _contiguous_runs(seq: Sequence) -> List[Tuple[Any, int]]:
+    """Collapse a sequence into ``(item, run_length)`` maximal runs."""
+    runs: List[Tuple[Any, int]] = []
+    for item in seq:
+        if runs and runs[-1][0] == item:
+            runs[-1] = (item, runs[-1][1] + 1)
+        else:
+            runs.append((item, 1))
+    return runs
+
+
+def _barrier_hits(jaxpr) -> int:
+    return sum(1 for eqn, _ in iter_eqns(jaxpr)
+               if eqn.primitive.name in _BARRIER_PRIMS)
+
+
+def outside_scan_split(jaxpr) -> Tuple[Counter, Counter]:
+    """Outside-scan collective counts split at the first top-level scan:
+    ``(prologue, epilogue)``.  The double-buffered engine build issues
+    round 1's bottom half before its scan and round k's top half after it
+    (``GraphEngine._build_overlap``); this is the census that verifies
+    the split."""
+    before: Counter = Counter()
+    after: Counter = Counter()
+    seen_scan = False
+    for eqn, in_scan in iter_eqns(jaxpr):
+        if eqn.primitive.name in _SCAN_PRIMS and not in_scan:
+            seen_scan = True
+        if in_scan:
+            continue
+        if eqn.primitive.name in COLLECTIVE_PRIMS:
+            (after if seen_scan else before)[eqn.primitive.name] += 1
+    return before, after
+
+
 # ---------------------------------------------------------------------------
 # entry-point audits
 # ---------------------------------------------------------------------------
@@ -208,6 +273,15 @@ def audit_engine(engine, k: int, state, extras=None, *,
     collectives per round inside it (apps whose ``update_fn`` runs its own
     collective — e.g. a psum normalizer — declare it via
     ``extra_collectives_per_round``).
+
+    For a double-buffered engine (``overlap=True``, k >= 2) the contract
+    rotates instead of vanishing: the scan still must be unique and the
+    interior round still costs ``2 * depth + extra``, but the prologue is
+    expected to issue exactly ``depth`` collectives (round 1's bottom
+    half) *before* the scan and the epilogue ``depth + extra`` (round k's
+    top half + update) *after* it — same per-dispatch total
+    ``k * (2 * depth + extra)``, reordered, with the split position
+    verified via :func:`outside_scan_split`.
     """
     import jax.numpy as jnp
     from jax.tree_util import tree_map
@@ -221,27 +295,119 @@ def audit_engine(engine, k: int, state, extras=None, *,
     outside = collective_counts(jaxpr, inside_scan=False)
     inside = collective_counts(jaxpr, inside_scan=True)
     per_round = sum(inside.values())
-    expected_round = 2 * engine.planned.depth + extra_collectives_per_round
+    depth = engine.planned.depth
+    expected_round = 2 * depth + extra_collectives_per_round
+    overlapped = bool(getattr(engine, "overlap", False)) and k >= 2
 
     checks = [
         CheckResult("one_scan_dispatch", n_scans == 1,
                     expected=1, actual=n_scans,
                     detail="k rounds must fuse into a single lax.scan"),
-        CheckResult("no_collectives_outside_scan", sum(outside.values()) == 0,
-                    expected={}, actual=dict(outside),
-                    detail="a collective outside the scan runs once per "
-                           "dispatch instead of per round"),
-        CheckResult("per_round_collectives_equal_plan_depth",
-                    per_round == expected_round,
-                    expected=expected_round, actual=per_round,
-                    detail=f"2*depth={2 * engine.planned.depth} reduce + "
-                           f"{extra_collectives_per_round} app-declared; "
-                           f"inside-scan: {dict(inside)}"),
     ]
+    if overlapped:
+        before, after = outside_scan_split(jaxpr)
+        exp_after = depth + extra_collectives_per_round
+        checks.append(CheckResult(
+            "prologue_epilogue_split",
+            sum(before.values()) == depth
+            and sum(after.values()) == exp_after,
+            expected={"before_scan": depth, "after_scan": exp_after},
+            actual={"before_scan": dict(before), "after_scan": dict(after)},
+            detail="double-buffered rotation: round 1's bottom half "
+                   "(depth collectives) before the scan, round k's top "
+                   "half + update after it — nothing else outside"))
+    else:
+        checks.append(CheckResult(
+            "no_collectives_outside_scan", sum(outside.values()) == 0,
+            expected={}, actual=dict(outside),
+            detail="a collective outside the scan runs once per "
+                   "dispatch instead of per round"))
+    checks.append(CheckResult(
+        "per_round_collectives_equal_plan_depth",
+        per_round == expected_round,
+        expected=expected_round, actual=per_round,
+        detail=f"2*depth={2 * depth} reduce + "
+               f"{extra_collectives_per_round} app-declared; "
+               f"inside-scan: {dict(inside)}"))
     checks += base_checks(jaxpr)
     return AuditReport(
         target=f"GraphEngine.run_fn[k={k}, collect={collect}, "
-               f"depth={engine.planned.depth}]", checks=checks)
+               f"depth={depth}, overlap={overlapped}]", checks=checks)
+
+
+def audit_overlap_sync(name: str, overlapped_fn, sequential_fn,
+                       *example_args, depth: int,
+                       n_buckets: int) -> AuditReport:
+    """Audit a bucketed stage-major sync schedule against its bucket-major
+    sequential twin (same buckets, one full 2·depth chain per bucket).
+
+    The overlap story rests on the schedule being a *pure reordering*:
+    the overlapped program must move exactly the same collective multiset
+    as the sequential one — no hidden extra reduction smuggled in to fix
+    up results (the injection test plants one and this audit must fail),
+    no phase dropped.  Checks, all on traced jaxprs (nothing executes):
+
+    * ``same_total_collectives`` — full collective census equality
+      between the two programs (every collective primitive, not just the
+      butterfly pair, so a hidden full-tree ``psum`` is caught).
+    * ``bucket_collective_count`` — ``depth * n_buckets`` each of
+      ``reduce_scatter`` and ``all_gather`` in the overlapped program
+      (2·depth per bucket total).
+    * ``stage_major_interleaving`` — the ordered butterfly stream is
+      exactly ``2 * depth`` contiguous runs of ``n_buckets`` same-stage
+      collectives: ``depth`` reduce_scatter runs (stage order) then
+      ``depth`` all_gather runs whose group signatures mirror the
+      reduce_scatter runs in reverse — the nested-butterfly up phase
+      retracing the down phase.
+    * ``no_barriers`` — zero scheduling fences: a correct overlap
+      schedule exposes reorderable work, it never forces order.
+    * :func:`base_checks` on the overlapped program.
+    """
+    jx_o = trace_jaxpr(overlapped_fn, *example_args)
+    jx_s = trace_jaxpr(sequential_fn, *example_args)
+    c_o = collective_counts(jx_o)
+    c_s = collective_counts(jx_s)
+
+    seq = butterfly_sequence(jx_o)
+    runs = _contiguous_runs(seq)
+    run_shape_ok = (len(runs) == 2 * depth
+                    and all(n == n_buckets for _, n in runs))
+    rs_runs = [sig for (prim, sig), _ in runs if prim == "reduce_scatter"]
+    ag_runs = [sig for (prim, sig), _ in runs if prim == "all_gather"]
+    phase_ok = (all(p == "reduce_scatter" for (p, _), _ in runs[:depth])
+                and all(p == "all_gather" for (p, _), _ in runs[depth:]))
+    mirror_ok = ag_runs == rs_runs[::-1]
+    barriers = _barrier_hits(jx_o)
+
+    checks = [
+        CheckResult("same_total_collectives", c_o == c_s,
+                    expected=dict(c_s), actual=dict(c_o),
+                    detail="overlap must be a pure reordering of the "
+                           "sequential schedule's collective multiset"),
+        CheckResult("bucket_collective_count",
+                    c_o.get("reduce_scatter", 0) == depth * n_buckets
+                    and c_o.get("all_gather", 0) == depth * n_buckets,
+                    expected={"reduce_scatter": depth * n_buckets,
+                              "all_gather": depth * n_buckets},
+                    actual={p: c_o.get(p, 0) for p in _BUTTERFLY_PRIMS},
+                    detail=f"2*depth={2 * depth} collectives per bucket, "
+                           f"{n_buckets} buckets"),
+        CheckResult("stage_major_interleaving",
+                    run_shape_ok and phase_ok and mirror_ok,
+                    expected=f"{depth} runs of {n_buckets} reduce_scatter "
+                             f"then {depth} runs of {n_buckets} all_gather "
+                             f"(mirrored stage groups)",
+                    actual=[(p, n) for (p, _), n in runs],
+                    detail="every bucket's stage-l exchange must issue "
+                           "before any bucket's stage-l+1"),
+        CheckResult("no_barriers", barriers == 0,
+                    expected=0, actual=barriers,
+                    detail="scheduling fences would force the order the "
+                           "overlap schedule is supposed to free"),
+    ]
+    checks += base_checks(jx_o, prefix="overlap_")
+    return AuditReport(
+        target=f"{name}[depth={depth}, buckets={n_buckets}]", checks=checks)
 
 
 def audit_callable(name: str, fn, *example_args,

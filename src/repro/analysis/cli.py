@@ -97,6 +97,46 @@ def _audit_sweep() -> List:
         parts, 300, degrees=(4, 2),
         mesh=jax.make_mesh((_AUDIT_DEVICES,), ("d",)))
     reports.append(audit_engine(engine, 5, p0, extras))
+
+    # overlap schedules: the double-buffered engine rotation and the
+    # bucketed stage-major dense sync (pure-reordering contract)
+    from repro.graph.engine import GraphEngine
+    import numpy as _np
+    ov_engine = GraphEngine(
+        [_np.asarray(o) for o in engine.out_sets],
+        [_np.asarray(i) for i in engine.in_sets],
+        engine.app, degrees=(4, 2),
+        mesh=jax.make_mesh((_AUDIT_DEVICES,), ("d",)), overlap=True)
+    reports.append(audit_engine(ov_engine, 5, p0, extras))
+
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from .auditor import audit_overlap_sync
+    from repro.core.allreduce import (dense_allreduce_hierarchical,
+                                      dense_allreduce_hierarchical_bucketed,
+                                      make_device_plan)
+    plan = make_device_plan([("d", _AUDIT_DEVICES)], {"d": (4, 2)}, 8, 8)
+    mesh = jax.make_mesh((_AUDIT_DEVICES,), ("d",))
+    sizes = (64, 32, 96)
+
+    def _mk(schedule):
+        def body(*xs):
+            xs = [x.reshape(x.shape[1:]) for x in xs]
+            if schedule == "stage_major":
+                outs = dense_allreduce_hierarchical_bucketed(xs, plan)
+            else:
+                outs = [dense_allreduce_hierarchical(x, plan) for x in xs]
+            return tuple(o[None] for o in outs)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P("d"),) * len(sizes),
+                         out_specs=(P("d"),) * len(sizes), check_vma=False)
+
+    args = tuple(jnp.zeros((_AUDIT_DEVICES, n), jnp.float32) for n in sizes)
+    reports.append(audit_overlap_sync(
+        "dense_allreduce_hierarchical_bucketed", _mk("stage_major"),
+        _mk("sequential"), *args, depth=plan.logical.depth,
+        n_buckets=len(sizes)))
     return reports
 
 

@@ -383,6 +383,39 @@ def dense_allreduce_hierarchical(x: jax.Array, plan: DevicePlan) -> jax.Array:
     return x
 
 
+def dense_allreduce_hierarchical_bucketed(
+        xs: Sequence[jax.Array], plan: DevicePlan) -> List[jax.Array]:
+    """:func:`dense_allreduce_hierarchical` over a list of buckets with a
+    **stage-major** issue order: every bucket's stage-``l`` exchange is
+    issued before any bucket's stage-``l+1`` (ARCHITECTURE.md "Overlap &
+    scheduling").  With B buckets of depth D the lowered collective
+    sequence is D runs of B ``reduce_scatter`` ops followed by D runs of B
+    ``all_gather`` ops (reversed stage order) — the shape that lets XLA's
+    latency-hiding scheduler slide independent compute between a bucket's
+    issue and its consumption, instead of the one monolithic
+    back-to-back chain the single-tensor path produces.
+
+    Both collectives are elementwise across the vector dimension and sum
+    contributions in fixed participant order, so reordering *which bucket*
+    goes first never reorders any element's reduction: each bucket's
+    result is bitwise identical to reducing it alone
+    (tests/test_overlap.py).  Same per-bucket divisibility contract as the
+    single-tensor path; collective count is ``2 * depth * len(xs)`` —
+    exactly ``len(xs)`` monolithic reductions' worth, no extra phases
+    (audited by ``repro.analysis.auditor.audit_overlap_sync``).
+    """
+    xs = list(xs)
+    for st in plan.stages:
+        g = list(map(list, st.axis_index_groups))
+        xs = [lax.psum_scatter(x, st.axis_name, scatter_dimension=0,
+                               axis_index_groups=g, tiled=True) for x in xs]
+    for st in reversed(plan.stages):
+        g = list(map(list, st.axis_index_groups))
+        xs = [lax.all_gather(x, st.axis_name, axis_index_groups=g, axis=0,
+                             tiled=True) for x in xs]
+    return xs
+
+
 def dense_allreduce_binary(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
     """Degree-2 butterfly (hypercube) allreduce via paired psums."""
     plan = ButterflyPlan(axis_size, (2,) * int(math.log2(axis_size)))

@@ -302,6 +302,17 @@ class TuneReport:
     ``max_depth`` was lifted to Omega(M)); ``candidates`` the top-k
     ``(modeled_s, degrees)`` ranking; ``measured_s`` the timed-trial
     seconds per candidate when confirmation ran (else None).
+
+    Overlap-aware sweeps (``overlap_compute_s``) additionally report the
+    achieved-vs-rate-optimal position: ``rate_optimal_s`` is the
+    schedule-independent allreduce lower bound for the swept payload
+    (``repro.core.netmodel.rate_optimal_allreduce_s``, per *On the
+    Computation Rate of All-Reduce*) and ``rate_fraction`` is
+    ``rate_optimal_s / modeled_s`` — 1.0 means the winner meets the bound,
+    smaller means headroom a better schedule could still claim.  Both are
+    populated on every sweep (overlapped or not) so the overlap benches
+    can chart the gap; ``overlap_compute_s`` echoes the request (None =
+    bulk-synchronous ranking).
     """
     plan: ButterflyPlan
     modeled_s: float
@@ -309,6 +320,9 @@ class TuneReport:
     fallback: Optional[str]
     candidates: Tuple[Tuple[float, Tuple[int, ...]], ...]
     measured_s: Optional[Dict[str, float]] = None
+    rate_optimal_s: Optional[float] = None
+    rate_fraction: Optional[float] = None
+    overlap_compute_s: Optional[float] = None
 
 
 def select_plan(num_nodes: int, n0: float, total_range: float,
@@ -316,7 +330,8 @@ def select_plan(num_nodes: int, n0: float, total_range: float,
                 bytes_per_entry: float = 12.0, serial_nic: bool = True,
                 top_k: int = 5, max_depth: int = 6,
                 wire: str = "raw", value_width: int = 1,
-                confirm: Optional[Callable[[ButterflyPlan], float]] = None
+                confirm: Optional[Callable[[ButterflyPlan], float]] = None,
+                overlap_compute_s: Optional[float] = None
                 ) -> TuneReport:
     """Rank all degree sequences under ``fabric`` with the power-law
     ``expected_counts`` compression curve; return a :class:`TuneReport`.
@@ -334,14 +349,28 @@ def select_plan(num_nodes: int, n0: float, total_range: float,
     term without touching latency/congestion, so the optimal degree
     factorization can genuinely shift — that re-ranking is the point of
     tuning per wire format (see ``benchmarks/bench_wire.py``).
+
+    ``overlap_compute_s`` re-ranks under the *overlapped* stage model
+    (``topology.ButterflyPlan.modeled_overlap_time``): candidates are
+    scored as serial overheads + max(bandwidth, overlap_compute_s), i.e.
+    each stage's wire time hides behind that much independent compute (the
+    bucketed gradient sync / rotated engine scan of ARCHITECTURE.md
+    "Overlap & scheduling").  Once bandwidth hides, the residual
+    serial-NIC cost is per-message setup — ``sum(k_l - 1)`` messages per
+    node — so the optimum shifts toward deeper, lower-degree
+    factorizations (binary in the limit), the opposite of the
+    bandwidth-bound direction (benchmarks/bench_overlap.py).
+    Every report also carries ``rate_optimal_s`` / ``rate_fraction`` — the
+    achieved-vs-rate-optimal gap ROADMAP item 2 asks the benches to chart.
     """
     check_wire(wire)
+    hidden = float(overlap_compute_s or 0.0)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         scored = tune(num_nodes, n0, total_range, fabric, bytes_per_entry,
                       serial_nic=serial_nic, top=max(int(top_k), 1),
                       max_depth=max_depth, wire=wire,
-                      value_width=value_width)
+                      value_width=value_width, hidden_compute_s=hidden)
     fallback = None
     for w in caught:
         msg = str(w.message)
@@ -362,9 +391,16 @@ def select_plan(num_nodes: int, n0: float, total_range: float,
             f"select_plan: winner {best} violates the paper's "
             f"decreasing-degree structure (SIV) — trust it only if it "
             f"came from a timed trial", UserWarning, stacklevel=2)
+    from .netmodel import rate_optimal_allreduce_s
+    payload = float(n0) * float(bytes_per_entry)
+    opt_s = rate_optimal_allreduce_s(payload, num_nodes, fabric)
     return TuneReport(plan=best, modeled_s=float(best_t),
                       decreasing=decreasing, fallback=fallback,
-                      candidates=candidates, measured_s=measured)
+                      candidates=candidates, measured_s=measured,
+                      rate_optimal_s=opt_s,
+                      rate_fraction=(opt_s / float(best_t)
+                                     if best_t > 0 else 0.0),
+                      overlap_compute_s=overlap_compute_s)
 
 
 # ---------------------------------------------------------------------------
@@ -394,7 +430,8 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
                    width: int, fabric: Fabric,
                    serial_nic: bool = True,
                    shrunk_from: Optional[int] = None,
-                   wire: str = "raw") -> dict:
+                   wire: str = "raw",
+                   overlap_compute_s: float = 0.0) -> dict:
     """The cache key: mesh shape, quantized nnz profile, merge mode,
     replication, value width, fabric fingerprint, NIC serialization mode,
     key-schema version.  Any field changing = a different plan file
@@ -411,7 +448,14 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
     payloads are *not* valid answers for raw ones (the byte model differs),
     so a raw-tuned entry must never be served for e.g. ``delta+bf16``.
     Like ``shrunk_from`` it enters the key only when non-default, keeping
-    every pre-existing "raw" digest stable."""
+    every pre-existing "raw" digest stable.
+
+    ``overlap_compute_s`` keys plans swept under the overlapped stage
+    model (``select_plan(overlap_compute_s=...)``): degrees reranked with
+    bandwidth hidden behind compute are not valid bulk-synchronous
+    answers.  Quantized to half-log2 buckets like the nnz profile and —
+    same convention again — only added when nonzero, so every
+    pre-existing digest is unchanged."""
     key = {
         "kind": "plan", "version": _KEY_VERSION,
         "mesh": [[str(a), int(s)] for a, s in mesh],
@@ -425,6 +469,10 @@ def plan_cache_key(*, mesh: Sequence[Tuple[str, int]], nnz: float,
         key["shrunk_from"] = int(shrunk_from)
     if check_wire(wire) != "raw":
         key["wire"] = str(wire)
+    if overlap_compute_s:
+        # seconds are fractional: bucket on the equivalent byte scale
+        key["overlap_bucket"] = _qlog(
+            float(overlap_compute_s) * fabric.beta_bytes_per_s)
     return key
 
 

@@ -33,6 +33,7 @@ planner, which knows how many messages each node sends per stage.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +95,27 @@ class Fabric:
             return fanout * t_one
         return t_one + (fanout - 1) * self.alpha_s
 
+    def stage_split(self, nbytes_per_dest: float, fanout: int,
+                    serial: bool = True) -> tuple:
+        """:meth:`stage_time` decomposed into ``(serial_s, bandwidth_s)``.
+
+        ``serial_s`` is the per-message setup + congestion share that no
+        scheduling trick removes; ``bandwidth_s`` is the wire-transmission
+        share an overlapped schedule can hide behind independent compute
+        (``ButterflyPlan.modeled_overlap_time``).  The two sum to
+        :meth:`stage_time` exactly, so the overlap model degrades to the
+        bulk-synchronous one when there is nothing to hide behind.
+        """
+        if fanout <= 0:
+            return 0.0, 0.0
+        payload = max(float(nbytes_per_dest), self.floor_bytes)
+        per_msg_bw = payload / self.beta_bytes_per_s
+        congest = self.gamma_s * max(fanout - 1, 0)
+        if serial:
+            return fanout * (self.alpha_s + congest), fanout * per_msg_bw
+        return (self.alpha_s + congest + (fanout - 1) * self.alpha_s,
+                per_msg_bw)
+
     def as_meta(self) -> dict:
         """JSON-able parameter dict (plan-cache / calibration persistence;
         inverse is :func:`repro.core.autotune.fabric_from_meta`)."""
@@ -102,6 +124,39 @@ class Fabric:
                 "alpha_s": self.alpha_s,
                 "floor_bytes": self.floor_bytes,
                 "gamma_s": self.gamma_s}
+
+
+def rate_optimal_allreduce_s(nbytes: float, num_nodes: int,
+                             fabric: Fabric) -> float:
+    """Rate-optimal allreduce lower bound (seconds) for ``nbytes`` of
+    payload per node over ``num_nodes`` nodes on ``fabric``.
+
+    The bandwidth term is the classic ``2 (M-1)/M * N / beta`` bound every
+    rate-optimal schedule attains asymptotically (*On the Computation Rate
+    of All-Reduce*, PAPERS.md arXiv:2602.22482: each of N payload units
+    must leave its source and reach every sink, and a node's NIC moves at
+    most ``beta`` bytes/s); the latency term is the ``2 ceil(log2 M)``
+    message-depth floor (reduce + broadcast trees cannot be shallower).
+    No schedule — ours included — can beat this; dividing it by an
+    achieved (modeled or measured) time gives the *rate fraction* the
+    overlap benches report (``benchmarks/bench_overlap.py``).
+    """
+    m = max(int(num_nodes), 1)
+    if m == 1:
+        return 0.0
+    bw = 2.0 * (m - 1) / m * float(nbytes) / fabric.beta_bytes_per_s
+    lat = 2.0 * math.ceil(math.log2(m)) * fabric.alpha_s
+    return lat + bw
+
+
+def rate_fraction(achieved_s: float, nbytes: float, num_nodes: int,
+                  fabric: Fabric) -> float:
+    """``rate_optimal_allreduce_s / achieved_s`` — 1.0 means the achieved
+    time meets the rate-optimal bound, smaller means headroom.  0.0 when
+    ``achieved_s`` is non-positive (degenerate single-node case)."""
+    if achieved_s <= 0.0:
+        return 0.0
+    return rate_optimal_allreduce_s(nbytes, num_nodes, fabric) / achieved_s
 
 
 # Paper testbed: cc1.4xlarge, 10 Gb/s Ethernet, Java sockets achieve ~2 Gb/s

@@ -117,6 +117,14 @@ class PlannedSparseAllreduce:
         ``all_to_all`` collectives (the per-round sync count)."""
         return len(self.layers)
 
+    @property
+    def q_cap(self) -> int:
+        """Per-device *bottom* capacity: :meth:`reduce_down_on_device`
+        returns (and :meth:`reduce_up_on_device` takes) ``[q_cap(,W)]`` —
+        the root-layer partial sums each node owns between the two
+        halves."""
+        return int(self.bottom_gather.shape[1])
+
     # ---------------------------------------------------------------------
     def device_args(self):
         """Routing tensors as jnp arrays, ordered for reduce_on_device."""
@@ -139,23 +147,53 @@ class PlannedSparseAllreduce:
         return tuple(P(axes if len(axes) > 1 else axes[0]) for _ in range(n))
 
     # ---------------------------------------------------------------------
-    def reduce_on_device(self, values: jax.Array, *routing) -> jax.Array:
-        """shard_map body: values [u_cap(,W)] on this device -> [uin_cap(,W)].
+    def _routing_parts(self, routing):
+        """Name + squeeze the flat ``routing`` tuple both halves consume.
 
-        ``routing`` tensors arrive sharded with a leading per-device dim of
-        size 1 on each plan axis; we squeeze them here.
-        """
-        self.trace_count += 1
+        Routing tensors arrive sharded with a leading per-device dim of
+        size 1 on each plan axis; returns ``(weights, user_scatter,
+        per_layer, bottom_gather, bottom_hit, user_gather)`` with
+        ``per_layer`` a list of ``(send_gather, merge_scatter,
+        up_send_gather, up_recv_scatter)`` tuples."""
         nax = len(self.dplan.axes)
 
         def sq(a):
             return a.reshape(a.shape[nax:])
 
         it = iter(routing)
-        if self.weights is not None:
-            # replica contribution weight (scalar per device, paper §V)
-            values = values * sq(next(it)).astype(values.dtype)
+        weights = sq(next(it)) if self.weights is not None else None
         user_scatter = sq(next(it))
+        per_layer = [tuple(sq(next(it)) for _ in range(4))
+                     for _ in self.layers]
+        return (weights, user_scatter, per_layer,
+                sq(next(it)), sq(next(it)), sq(next(it)))
+
+    def reduce_on_device(self, values: jax.Array, *routing) -> jax.Array:
+        """shard_map body: values [u_cap(,W)] on this device -> [uin_cap(,W)].
+
+        Composition of the two halves — ``depth`` down ``all_to_all``
+        stages then ``depth`` up stages back-to-back (the bulk-synchronous
+        schedule).  Overlapped callers (``repro.graph.engine`` with
+        ``overlap=True``) call :meth:`reduce_down_on_device` /
+        :meth:`reduce_up_on_device` directly so independent compute can sit
+        between the halves; both schedules run the identical op sequence,
+        so results are bitwise equal (tests/test_overlap.py).
+        """
+        return self.reduce_up_on_device(
+            self.reduce_down_on_device(values, *routing), *routing)
+
+    def reduce_down_on_device(self, values: jax.Array, *routing) -> jax.Array:
+        """Bottom half of the reduce: user values ``[u_cap(,W)]`` ->
+        root-layer partial sums ``[q_cap(,W)]`` (``depth`` down
+        ``all_to_all`` stages + per-stage scatter-add merges).  Counts one
+        reduce trace (``trace_count``); the up half does not, so a full
+        reduce nets exactly one however it is scheduled."""
+        self.trace_count += 1
+        (weights, user_scatter, per_layer, bottom_gather, bottom_hit,
+         _user_gather) = self._routing_parts(routing)
+        if weights is not None:
+            # replica contribution weight (scalar per device, paper §V)
+            values = values * weights.astype(values.dtype)
         W = values.shape[-1] if values.ndim > 1 else None
 
         def zeros(n):
@@ -165,12 +203,8 @@ class PlannedSparseAllreduce:
         cur = zeros(self.sorted_size + 1).at[user_scatter].add(values)[:-1]
 
         stages = self.dplan.stages
-        up_payload_gathers, up_scatters, up_sizes = [], [], []
         for l, L in enumerate(self.layers):
-            send_g = sq(next(it))
-            merge_s = sq(next(it))
-            up_g = sq(next(it))
-            up_s = sq(next(it))
+            send_g, merge_s, _up_g, _up_s = per_layer[l]
             k, cap = send_g.shape[0], send_g.shape[1]
             safe = jnp.maximum(send_g, 0)
             picked = cur[safe] * (send_g >= 0)[(...,) + (None,) * (values.ndim - 1)]
@@ -181,33 +215,39 @@ class PlannedSparseAllreduce:
             nxt = nxt.at[merge_s.reshape((-1,))].add(
                 recv.reshape((k * cap,) + recv.shape[2:]))
             cur = nxt[:-1]
-            up_payload_gathers.append(up_g)
-            up_scatters.append(up_s)
-            up_sizes.append(L.up_size)
 
-        bottom_gather = sq(next(it))
-        bottom_hit = sq(next(it))
-        user_gather = sq(next(it))
-
-        up = cur[jnp.maximum(bottom_gather, 0)] \
+        return cur[jnp.maximum(bottom_gather, 0)] \
             * bottom_hit[(...,) + (None,) * (values.ndim - 1)]
 
+    def reduce_up_on_device(self, up: jax.Array, *routing) -> jax.Array:
+        """Top half of the reduce: root-layer partials ``[q_cap(,W)]``
+        (from :meth:`reduce_down_on_device`) -> requested values
+        ``[uin_cap(,W)]`` (``depth`` up ``all_to_all`` return stages in
+        reverse layer order + the final user gather)."""
+        (_weights, _user_scatter, per_layer, _bottom_gather, _bottom_hit,
+         user_gather) = self._routing_parts(routing)
+        ndim = up.ndim
+        W = up.shape[-1] if ndim > 1 else None
+
+        def zeros(n):
+            return jnp.zeros((n,) if W is None else (n, W), up.dtype)
+
         for l in reversed(range(len(self.layers))):
-            up_g, up_s = up_payload_gathers[l], up_scatters[l]
+            _send_g, _merge_s, up_g, up_s = per_layer[l]
             k, cap = up_g.shape[0], up_g.shape[1]
             safe = jnp.maximum(up_g, 0)
-            picked = up[safe] * (up_g >= 0)[(...,) + (None,) * (values.ndim - 1)]
+            picked = up[safe] * (up_g >= 0)[(...,) + (None,) * (ndim - 1)]
             g = list(map(list, self.dplan.stages[l].axis_index_groups))
             recv = lax.all_to_all(picked, self.dplan.stages[l].axis_name,
                                   split_axis=0, concat_axis=0,
                                   axis_index_groups=g)
-            nxt = zeros(up_sizes[l] + 1)
+            nxt = zeros(self.layers[l].up_size + 1)
             nxt = nxt.at[up_s.reshape((-1,))].set(
                 recv.reshape((k * cap,) + recv.shape[2:]), mode="drop")
             up = nxt[:-1]
 
         return up[jnp.maximum(user_gather, 0)] \
-            * (user_gather >= 0)[(...,) + (None,) * (values.ndim - 1)]
+            * (user_gather >= 0)[(...,) + (None,) * (ndim - 1)]
 
     # ---------------------------------------------------------------------
     def with_dead(self, dead=None) -> "PlannedSparseAllreduce":

@@ -236,6 +236,58 @@ class ButterflyPlan:
             t += fabric.stage_time(up_bytes, k - 1, serial=serial_nic)
         return t
 
+    def modeled_overlap_time(self, n0: float, total_range: float,
+                             fabric: Fabric = EC2_2013,
+                             bytes_per_entry: float = 12.0,
+                             merge_ns_per_entry: float = 4.0,
+                             serial_nic: bool = True, wire: str = "raw",
+                             value_width: int = 1,
+                             hidden_compute_s: float = 0.0) -> float:
+        """Modeled makespan (s) of one allreduce *plus* ``hidden_compute_s``
+        of independent compute under an overlapped schedule.
+
+        The overlapped schedules (the bucketed stage-major gradient sync of
+        ``repro.train.step`` and the graph engine's rotated scan,
+        ARCHITECTURE.md "Overlap & scheduling") issue each stage's payload
+        transmission early and consume it late, so the *bandwidth* share of
+        every stage can proceed concurrently with compute that does not
+        depend on it.  Per-message setup + congestion and the local merges
+        stay serial (``Fabric.stage_split``):
+
+            t = serial_total + max(bandwidth_total, hidden_compute_s)
+
+        With ``hidden_compute_s=0`` this equals :meth:`modeled_time`
+        exactly (the splits are exact decompositions), so the synchronous
+        comparator is ``modeled_time(...) + hidden_compute_s`` and the
+        modeled overlap win is their difference.  ``select_plan`` reranks
+        degree sequences under this term via ``overlap_compute_s``
+        (``repro.core.autotune``; TUNING.md) — once bandwidth hides, the
+        residual serial-NIC cost is per-message setup, ``sum(k_l - 1)``
+        messages per node, so the optimum shifts toward deeper,
+        lower-degree factorizations (binary in the limit) — the opposite
+        of the bandwidth-bound direction (benchmarks/bench_overlap.py
+        ``model_rerank`` rows chart the shift).
+        """
+        check_wire(wire)
+        counts = self.expected_counts(n0, total_range)
+        bpe = self._layer_entry_bytes(bytes_per_entry, wire, value_width)
+        scale_overhead = 4.0 if wire == "delta+int8ef" else 0.0
+        serial_t = 0.0
+        bw_t = 0.0
+        for l, k in enumerate(self.degrees):
+            down_bytes = counts[l] / k * bpe[l] + scale_overhead
+            lat, bw = fabric.stage_split(down_bytes, k - 1, serial=serial_nic)
+            serial_t += lat + counts[l] * max(math.log2(k), 1.0) \
+                * merge_ns_per_entry * 1e-9
+            bw_t += bw
+        for l in reversed(range(self.depth)):
+            k = self.degrees[l]
+            up_bytes = counts[l] / k * bpe[l] + scale_overhead
+            lat, bw = fabric.stage_split(up_bytes, k - 1, serial=serial_nic)
+            serial_t += lat
+            bw_t += bw
+        return serial_t + max(bw_t, float(hidden_compute_s))
+
     def __str__(self):
         return "x".join(str(k) for k in self.degrees) or "1"
 
@@ -289,7 +341,8 @@ def num_prime_factors(m: int) -> int:
 def tune(num_nodes: int, n0: float, total_range: float,
          fabric: Fabric = EC2_2013, bytes_per_entry: float = 12.0,
          serial_nic: bool = True, top: int = 0, max_depth: int = 6,
-         wire: str = "raw", value_width: int = 1):
+         wire: str = "raw", value_width: int = 1,
+         hidden_compute_s: float = 0.0):
     """Rank all degree sequences by modeled time; return best (or top-n list).
 
     Model assumptions (documented, not measured — for a *calibrated* sweep
@@ -303,8 +356,13 @@ def tune(num_nodes: int, n0: float, total_range: float,
       congestion) with ``serial_nic`` picking NIC serialization vs
       per-link overlap, and the local k-way merge costs
       ``entries * log2(k)`` at a fixed ns/entry;
-    * stages are bulk-synchronous: no cross-stage overlap (paper Fig 7's
-      threading gains are *not* modeled here).
+    * with ``hidden_compute_s=0`` (default) stages are bulk-synchronous:
+      no cross-stage overlap (paper Fig 7's threading gains are *not*
+      modeled); ``hidden_compute_s > 0`` scores candidates with
+      :meth:`ButterflyPlan.modeled_overlap_time` instead — the bandwidth
+      share of every stage is hidden behind that much independent compute,
+      which is how the overlapped schedules re-rank degrees
+      (``select_plan(overlap_compute_s=...)`` in ``repro.core.autotune``).
 
     Degenerate sweeps degrade gracefully instead of silently returning the
     flat plan: if ``num_nodes`` is prime (or 1) the round-robin plan
@@ -331,10 +389,16 @@ def tune(num_nodes: int, n0: float, total_range: float,
     scored = []
     for degs in facs:
         plan = ButterflyPlan(num_nodes, degs)
-        scored.append((plan.modeled_time(n0, total_range, fabric,
-                                         bytes_per_entry,
-                                         serial_nic=serial_nic, wire=wire,
-                                         value_width=value_width), plan))
+        if hidden_compute_s > 0.0:
+            t = plan.modeled_overlap_time(
+                n0, total_range, fabric, bytes_per_entry,
+                serial_nic=serial_nic, wire=wire, value_width=value_width,
+                hidden_compute_s=hidden_compute_s)
+        else:
+            t = plan.modeled_time(n0, total_range, fabric, bytes_per_entry,
+                                  serial_nic=serial_nic, wire=wire,
+                                  value_width=value_width)
+        scored.append((t, plan))
     scored.sort(key=lambda x: x[0])
     if top:
         return scored[:top]

@@ -159,13 +159,23 @@ class GraphEngine:
     ``plan_cache`` / ``retune`` forward to ``SparseAllreduce`` — pass
     ``retune=True`` after recalibrating the fabric, ``plan_cache=False``
     to opt out of the disk tier.
+
+    ``overlap=True`` selects the double-buffered round schedule
+    (:meth:`_build_overlap`; ARCHITECTURE.md "Overlap & scheduling"):
+    round k's top-half return shares a scanned body with round k+1's SpMV
+    and down half, with the in-flight bottom buffer carried across the
+    scan boundary.  Same ops, same collective totals, bitwise-identical
+    results — only the issue order changes (k=1 has nothing to rotate and
+    runs the synchronous body).  The run-fn cache, zero-retrace contract
+    and ``report`` semantics are unchanged.
     """
 
     def __init__(self, out_sets, in_sets, app: EngineApp, *,
                  degrees="auto", mesh=None, seed: int = 0,
                  fabric: Fabric = EC2_2013, plan_cache=True,
-                 retune: bool = False):
+                 retune: bool = False, overlap: bool = False):
         self.app = app
+        self.overlap = bool(overlap)
         self.num_nodes = len(out_sets)
         self.out_sets = [np.asarray(o, np.uint32) for o in out_sets]
         self.in_sets = [np.asarray(i, np.uint32) for i in in_sets]
@@ -206,21 +216,128 @@ class GraphEngine:
         return GraphEngine(self.out_sets, self.in_sets, self.app,
                            degrees=self.ar.plan.degrees, mesh=mesh,
                            seed=self.seed, fabric=self.fabric,
-                           plan_cache=self.plan_cache_arg, retune=False)
+                           plan_cache=self.plan_cache_arg, retune=False,
+                           overlap=self.overlap)
 
     # -- static per-reduce sync structure ---------------------------------
     def sync_report(self) -> dict:
         """Per-round sync accounting: one reduce = ``depth`` down +
         ``depth`` up ``all_to_all`` phases; host round-trips equal
-        dispatches (one per ``run`` call), not rounds."""
+        dispatches (one per ``run`` call), not rounds.  ``overlap``
+        reports the schedule: the rotated double-buffered scan keeps the
+        same per-round collective total, split as ``depth`` prologue +
+        ``depth`` epilogue phases outside the scan plus ``2 * depth`` per
+        interior round inside it (audited by
+        ``repro.analysis.auditor.audit_engine``)."""
         return dict(self.report,
                     butterfly_depth=self.planned.depth,
                     reduce_collectives_per_round=2 * self.planned.depth,
                     host_roundtrips=self.report["dispatches"],
-                    config_cache=self.config_cache)
+                    config_cache=self.config_cache,
+                    overlap=self.overlap)
+
+    # ---------------------------------------------------------------------
+    def _build_overlap(self, k: int, collect: str) -> Callable:
+        """Double-buffered k-round pipeline (``overlap=True``, k >= 2).
+
+        The synchronous body runs SpMV → down half → up half → update, so
+        both butterfly halves sit back-to-back with no independent work
+        adjacent to either.  This build *rotates* the loop at the round
+        boundary: the carry holds round j's in-flight bottom-half buffer
+        (``[q_cap(,W)]`` root partials, issued at the end of body j-1 and
+        consumed at the start of body j), so each scanned body is
+
+            up half of round j  →  update  →  SpMV of round j+1
+                                →  down half of round j+1
+
+        — round j's top-half return and round j+1's SpMV/down issue share
+        one body, with the scan boundary between a buffer's issue and its
+        consumption (the async-friendly shape XLA's collective pipeliner
+        and latency-hiding scheduler need).  Round 1's SpMV + down half
+        run as a prologue before the scan and round k's up half + update
+        as an epilogue after it, so the per-dispatch collective total is
+        unchanged: ``depth`` + (k-1) * ``2 depth`` + ``depth`` = k *
+        ``2 depth``.  Every round still executes the identical op
+        sequence on identical inputs — results are bitwise equal to the
+        synchronous build (tests/test_overlap.py) — and the frozen
+        routing / run-fn caches are shared, so the zero-retrace contract
+        holds unchanged (tests/test_graph_engine.py).
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+        from jax.sharding import PartitionSpec as P
+        from jax.tree_util import tree_map
+
+        from repro.compat import shard_map
+
+        planned, app, axis = self.planned, self.app, self.axis
+        spec = P(axis)
+
+        def unsq(t):
+            return tree_map(lambda a: a.reshape(a.shape[1:]), t)
+
+        def resq(t):
+            return tree_map(lambda a: a.reshape((1,) + a.shape), t)
+
+        def pre_body(state, extras, *routing):
+            # round 1: SpMV + bottom half, issued before the scan starts
+            s, e = unsq(state), unsq(extras)
+            out = app.out_fn(s, e)
+            bottom = planned.reduce_down_on_device(out, *routing)
+            return resq(bottom), resq(out)
+
+        def mid_body(state, bottom, extras, *routing):
+            # round j's top-half return + round j+1's SpMV and down half
+            self.report["step_traces"] += 1
+            s, b, e = unsq(state), unsq(bottom), unsq(extras)
+            in_raw = planned.reduce_up_on_device(b, *routing)
+            s2 = app.update_fn(s, in_raw, e, axis)
+            out = app.out_fn(s2, e)
+            b2 = planned.reduce_down_on_device(out, *routing)
+            return resq(s2), resq(b2), resq(out)
+
+        def post_body(state, bottom, extras, *routing):
+            # round k: top-half return + update, after the scan drains
+            s, b, e = unsq(state), unsq(bottom), unsq(extras)
+            in_raw = planned.reduce_up_on_device(b, *routing)
+            return resq(app.update_fn(s, in_raw, e, axis))
+
+        rspecs = (spec,) * len(self._routing)
+        smap_pre = shard_map(pre_body, mesh=self.mesh,
+                             in_specs=(spec, spec) + rspecs,
+                             out_specs=(spec, spec), check_vma=False)
+        smap_mid = shard_map(mid_body, mesh=self.mesh,
+                             in_specs=(spec, spec, spec) + rspecs,
+                             out_specs=(spec, spec, spec), check_vma=False)
+        smap_post = shard_map(post_body, mesh=self.mesh,
+                              in_specs=(spec, spec, spec) + rspecs,
+                              out_specs=spec, check_vma=False)
+
+        def run_k(state, extras, *routing):
+            bottom, out1 = smap_pre(state, extras, *routing)
+
+            def scan_body(carry, _):
+                s, b, _last = carry
+                s2, b2, out = smap_mid(s, b, extras, *routing)
+                ys = s2 if collect == "trajectory" else None
+                return (s2, b2, out), ys
+
+            (s, b, last_out), traj = lax.scan(
+                scan_body, (state, bottom, out1), None, length=k - 1)
+            final = smap_post(s, b, extras, *routing)
+            if collect == "trajectory":
+                traj = tree_map(
+                    lambda ys, f: jnp.concatenate([ys, f[None]], axis=0),
+                    traj, final)
+            return final, last_out, traj
+
+        return jax.jit(run_k)
 
     # ---------------------------------------------------------------------
     def _build(self, k: int, collect: str) -> Callable:
+        if self.overlap and k >= 2:
+            return self._build_overlap(k, collect)
         import jax
         import jax.numpy as jnp
         from jax import lax

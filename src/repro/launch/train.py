@@ -101,6 +101,18 @@ def main(argv=None):
                          "quantize values, the latter with an error-"
                          "feedback carry re-injected each step; requires "
                          "--sync sparse for non-raw values")
+    ap.add_argument("--sync-overlap", default="off",
+                    choices=["off", "bucketed"],
+                    help="gradient-sync schedule (hier/sparse sync only): "
+                         "'bucketed' splits the dense butterfly leaves into "
+                         "byte-bounded buckets issued stage-major, so sync "
+                         "collectives interleave with compute instead of "
+                         "forming one monolithic chain; results are bitwise "
+                         "identical to 'off' (tests/test_overlap.py)")
+    ap.add_argument("--sync-bucket-kb", type=int, default=4096,
+                    help="bucket byte budget (KiB) for --sync-overlap "
+                         "bucketed; leaves above the budget get a bucket "
+                         "of their own")
     ap.add_argument("--replication", type=int, default=1,
                     help="r-way replicated data parallelism (paper SV fault "
                          "tolerance): the data axis hosts dp/r logical batch "
@@ -153,7 +165,9 @@ def main(argv=None):
                                   8, args.batch * args.seq // dsize),
                               sync_merge=args.merge, sync_wire=args.wire,
                               replication=args.replication, dead=dead,
-                              retune=args.retune)
+                              retune=args.retune,
+                              sync_overlap=args.sync_overlap,
+                              sync_bucket_bytes=args.sync_bucket_kb * 1024)
     params = T.init_params(cfg, mc.tp, seed=args.seed)
     opt_state = AdamW().init(params)
     stream = batch_stream(cfg, args.batch, args.seq, seed=args.seed)

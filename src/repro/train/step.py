@@ -32,6 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.allreduce import (DevicePlan, dense_allreduce_hierarchical,
+                                  dense_allreduce_hierarchical_bucketed,
                                   make_device_plan, sparse_allreduce_union)
 from repro.core.sparse_vec import SENTINEL, HashPerm, SparseChunk
 from repro.models import transformer as T
@@ -137,6 +138,92 @@ def _hier_allreduce_leaf(g: jax.Array, plan: DevicePlan) -> jax.Array:
     return out[:n].reshape(g.shape).astype(g.dtype)
 
 
+# Default bucket byte budget for the overlapped sync schedule: 4 MB sits
+# just above the paper's 2-4 MB effective packet floor, so every bucket's
+# messages stay bandwidth-bound while still yielding several independent
+# buckets on the reduced configs the tests sweep.
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+SYNC_OVERLAP_MODES = ("off", "bucketed")
+
+
+def plan_grad_buckets(sizes: Sequence[int], bucket_bytes: int,
+                      bytes_per_elem: int = 4) -> list:
+    """Greedy contiguous partition of leaf indices into byte-bounded buckets.
+
+    ``sizes``: element count per gradient leaf, in sync order.  Returns a
+    list of index lists such that (a) their concatenation is exactly
+    ``range(len(sizes))`` — an order-preserving exact cover, every leaf in
+    exactly one bucket; (b) each bucket's total bytes is at most
+    ``bucket_bytes`` unless the bucket is a single oversized leaf (a leaf
+    larger than the budget gets a bucket of its own rather than being
+    split — splitting would change the per-leaf pad-to-num_nodes layout
+    and break bitwise parity with the unbucketed path).  Both properties
+    hold for every permutation of ``sizes`` (hypothesis-checked in
+    tests/test_overlap.py).
+
+    Greedy-contiguous rather than bin-packed on purpose: leaves arrive in
+    reverse-backward order, so contiguity is what lets early buckets'
+    collectives issue while later grads are still being produced.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    if bytes_per_elem <= 0:
+        raise ValueError(
+            f"bytes_per_elem must be positive, got {bytes_per_elem}")
+    buckets: list = []
+    cur: list = []
+    cur_bytes = 0
+    for i, n in enumerate(sizes):
+        if n < 0:
+            raise ValueError(f"leaf size must be >= 0, got sizes[{i}]={n}")
+        nb = int(n) * bytes_per_elem
+        if cur and cur_bytes + nb > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nb
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _bucketed_hier_leaves(gs: Sequence[jax.Array], plan: DevicePlan,
+                          bucket_bytes: int) -> list:
+    """Hier-allreduce a list of gradient leaves through the bucketed
+    stage-major schedule; returns per-leaf reduced arrays in order.
+
+    Each leaf gets exactly the :func:`_hier_allreduce_leaf` treatment —
+    f32 flatten, pad to a ``num_nodes`` multiple, hierarchical allreduce,
+    slice, reshape, cast back — except that padded flats are concatenated
+    into :func:`plan_grad_buckets` buckets and all buckets traverse the
+    butterfly together, stage-major
+    (:func:`repro.core.allreduce.dense_allreduce_hierarchical_bucketed`).
+    The collectives are elementwise, so the concat + reorder is a pure
+    schedule change: every leaf's result is bitwise identical to the
+    unbucketed path's (tests/test_overlap.py parity sweep).
+    """
+    m = plan.num_nodes
+    flats = []
+    for g in gs:
+        pad = (-g.size) % m
+        flats.append(jnp.pad(g.astype(jnp.float32).reshape(-1), (0, pad)))
+    sizes = [f.size for f in flats]
+    buckets = plan_grad_buckets(sizes, bucket_bytes)
+    cats = [flats[b[0]] if len(b) == 1
+            else jnp.concatenate([flats[i] for i in b])
+            for b in buckets]
+    reduced = dense_allreduce_hierarchical_bucketed(cats, plan)
+    out = [None] * len(gs)
+    for b, r in zip(buckets, reduced):
+        off = 0
+        for i in b:
+            out[i] = (r[off:off + gs[i].size]
+                      .reshape(gs[i].shape).astype(gs[i].dtype))
+            off += sizes[i]
+    return out
+
+
 def sparse_sync_rows(grad: jax.Array, ids: jax.Array, mc: MeshCtx,
                      dplan: DevicePlan, edges: Sequence[jax.Array],
                      merge: str = "sort", wire: str = "raw",
@@ -212,7 +299,9 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
                wire: str = "raw",
                ef: Optional[jax.Array] = None,
                repl_weight: Optional[jax.Array] = None,
-               dp_logical: Optional[int] = None
+               dp_logical: Optional[int] = None,
+               overlap: str = "off",
+               bucket_bytes: int = DEFAULT_BUCKET_BYTES
                ) -> Tuple[Any, jax.Array, Optional[jax.Array]]:
     """Combine per-device grads into the grad of the global mean loss.
 
@@ -227,11 +316,27 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
     error-feedback carry (:func:`sparse_sync_rows`); the updated carry is
     returned as the third element (``ef`` unchanged when the sparse leaf
     was not synced this step, ``None`` when error feedback is off).
+
+    ``overlap="bucketed"`` reschedules the hierarchical-butterfly leaves:
+    instead of one monolithic 2·depth collective chain per leaf, leaves
+    are concatenated into ``bucket_bytes``-bounded buckets
+    (:func:`plan_grad_buckets`) and all buckets traverse the butterfly
+    **stage-major** — every bucket's stage-l exchange issues before any
+    stage-l+1 — so early buckets' collectives overlap the remaining
+    backward compute and later buckets' sends (ARCHITECTURE.md "Overlap &
+    scheduling").  A pure schedule permutation of elementwise collectives:
+    results are bitwise identical to ``"off"``, collective totals are
+    unchanged, and the sparse / fsdp / psum leaves (including the merge /
+    wire / replication machinery) are untouched.
     """
+    if overlap not in SYNC_OVERLAP_MODES:
+        raise ValueError(
+            f"overlap must be one of {SYNC_OVERLAP_MODES}, got {overlap!r}")
     spec = full_model_spec_tuples(cfg, mc.tp)
     dp = float(dp_logical if dp_logical is not None else mc.dp)
     overflow = jnp.zeros((), jnp.int32)
     new_ef = ef
+    deferred = []          # (path, weighted grad) awaiting the bucketed pass
 
     def leaf_sync(path, g, s):
         nonlocal overflow, new_ef
@@ -248,6 +353,9 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
                 new_ef = nef
             return synced / dp
         if mode in ("hier", "sparse") and hier_plan is not None and g.size >= mc.dp:
+            if overlap == "bucketed":
+                deferred.append((path, g))
+                return None        # resolved by the bucketed pass below
             return _hier_allreduce_leaf(g, hier_plan) / dp
         out = g
         for a in mc.dp_axes:
@@ -257,6 +365,11 @@ def sync_grads(grads, cfg: ModelConfig, mc: MeshCtx, mode: str,
     flat = _flatten_with_path(grads)
     sflat = dict(_flatten_with_path(spec))
     synced = [(p, leaf_sync(p, g, sflat[p])) for p, g in flat]
+    if deferred:
+        reduced = _bucketed_hier_leaves([g for _, g in deferred], hier_plan,
+                                        bucket_bytes)
+        by_path = {p: r / dp for (p, _), r in zip(deferred, reduced)}
+        synced = [(p, by_path[p] if v is None else v) for p, v in synced]
     return _unflatten_from_path(grads, synced), overflow, new_ef
 
 
@@ -336,6 +449,140 @@ def init_cache_global(cfg: ModelConfig, mc: MeshCtx, b: int, max_seq: int,
 # Train step
 # ---------------------------------------------------------------------------
 
+def _build_sync_plans(cfg: ModelConfig, mc: MeshCtx, mesh: Mesh, sync: str,
+                      dp_degrees, sparse_tokens_hint: Optional[int],
+                      retune: bool):
+    """The gradient-sync plan set for one (cfg, mesh, sync) combination:
+    ``(hier_plan, sparse_plan, sparse_edges)`` — shared by
+    :func:`make_train_step` and the model-free :func:`make_sync_fn`
+    harness so both paths sync through identical routing."""
+    sparse_plan = sparse_edges = None
+    hier_plan = None
+    if sync in ("hier", "sparse"):
+        hier_plan = default_dp_plan(mc, 8, 8, dp_degrees, retune=retune)
+    if sync == "sparse":
+        v_l = T.padded_vocab(cfg, mc.tp) // mc.tp
+        # in capacity: unique local rows <= min(tokens/device, vocab shard).
+        # Sizing to the actual batch sparsity is what makes the sparse path
+        # win (SPerf H1: worst-case capacities moved MORE bytes than ring).
+        cin = int(min(v_l, sparse_tokens_hint or (1 << 16)))
+        cin = (cin + 7) // 8 * 8
+        cout = (min(v_l, cin * mc.dp) + 7) // 8 * 8
+        sp_degrees = dp_degrees
+        if dp_degrees == "auto":
+            sp_degrees = tuned_dp_degrees(mc, cin, cout, retune=retune)
+        sparse_plan = make_device_plan(
+            [(a, mesh.shape[a]) for a in mc.dp_axes],
+            sp_degrees or {a: (mesh.shape[a],) for a in mc.dp_axes},
+            in_capacity=cin, out_capacity=cout)
+        sparse_edges = [jnp.asarray(e) for e in sparse_plan.edges_arrays()]
+    return hier_plan, sparse_plan, sparse_edges
+
+
+def _check_sync_settings(sync: str, sync_merge: str, sync_wire: str,
+                         sync_overlap: str):
+    """Shared make_train_step / make_sync_fn validation (fires before any
+    mesh work; tests/test_overlap.py, tests/test_wire.py)."""
+    from repro.core.allreduce import MERGE_MODES
+    from repro.core.topology import check_wire
+    if sync_merge not in MERGE_MODES:
+        raise ValueError(
+            f"sync_merge must be one of {MERGE_MODES}, got {sync_merge!r}")
+    check_wire(sync_wire)
+    if sync_wire != "raw" and sync != "sparse":
+        raise ValueError(
+            f"sync_wire={sync_wire!r} only applies to the sparse sync path "
+            f"(got sync={sync!r}); ring/hier sync is dense and unencoded")
+    if sync_overlap not in SYNC_OVERLAP_MODES:
+        raise ValueError(f"sync_overlap must be one of {SYNC_OVERLAP_MODES}, "
+                         f"got {sync_overlap!r}")
+    if sync_overlap == "bucketed" and sync not in ("hier", "sparse"):
+        raise ValueError(
+            f"sync_overlap='bucketed' requires sync in ('hier', 'sparse') "
+            f"(got sync={sync!r}): ring sync is a single psum per leaf with "
+            f"no butterfly stages to interleave")
+
+
+def make_sync_fn(cfg: ModelConfig, mesh: Mesh, *, sync: str = "hier",
+                 dp_degrees=None,
+                 sync_merge: str = "sort",
+                 sync_wire: str = "raw",
+                 replication: int = 1,
+                 dead: Optional[set] = None,
+                 sync_overlap: str = "off",
+                 sync_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 sparse_tokens_hint: Optional[int] = None,
+                 retune: bool = False,
+                 salt_shards: bool = True):
+    """The gradient-sync stage of :func:`make_train_step` as a standalone
+    jitted callable — no model forward/backward attached.
+
+    Returns ``(fn, pspec)``: ``fn(grads, token_ids) -> (synced_grads,
+    overflow)`` where ``grads`` is a global (fully addressable) param-tree
+    of gradients laid out per ``full_model_pspec`` and ``token_ids`` is
+    the ``[B, S]`` token batch the sparse leaf's row union is built from
+    (dp-sharded like the train batch; ignored unless ``sync="sparse"``).
+
+    This is the bit-exactness harness entry (tests/test_overlap.py): the
+    parity sweep runs the *same* plan / merge / wire / replication /
+    overlap machinery as the full train step — through the shared
+    :func:`_build_sync_plans` and :func:`sync_grads` — while dispatching
+    only the sync collectives, so a 36-combination 16-device sweep stays
+    tractable.  Error feedback is not threaded (``wire="delta+int8ef"``
+    syncs with a zero carry); use the full step for EF semantics.
+
+    ``salt_shards`` (default on — this is a harness): non-fsdp gradient
+    leaves arrive data-replicated under ``full_model_pspec``, which would
+    let contribution-routing bugs cancel symmetrically; the body therefore
+    scales each *logical* data shard's gradients by a distinct power-of-two
+    factor before syncing.  Dyadic factors keep dyadic-lattice test values
+    exactly representable, and salting by logical (not physical) shard
+    keeps r-way replicas identical, so replicated results stay invariant
+    to any survivable ``dead`` set.
+    """
+    _check_sync_settings(sync, sync_merge, sync_wire, sync_overlap)
+    mc = mesh_ctx(mesh)
+    repl_weights = None
+    dp_logical = mc.dp
+    if replication > 1 or dead:
+        from repro.core.replication import contribution_weights
+        if mc.dp % replication:
+            raise ValueError(f"dp={mc.dp} not divisible by r={replication}")
+        repl_weights = contribution_weights(mc.dp, replication, dead)
+        dp_logical = mc.dp // replication
+    hier_plan, sparse_plan, sparse_edges = _build_sync_plans(
+        cfg, mc, mesh, sync, dp_degrees, sparse_tokens_hint, retune)
+    pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    dspec = P(mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0])
+    edge_specs = tuple(P(*mc.dp_axes, None) for _ in (sparse_edges or ()))
+
+    def body(grads, tokens, *edges):
+        flat = jnp.zeros((), jnp.int32)
+        for a in mc.dp_axes:
+            flat = flat * mesh.shape[a] + lax.axis_index(a)
+        if salt_shards:
+            salt = jnp.exp2(-((flat % dp_logical) % 4).astype(jnp.float32))
+            grads = jax.tree.map(lambda g: g * salt.astype(g.dtype), grads)
+        repl_w = None
+        if repl_weights is not None:
+            repl_w = jnp.asarray(repl_weights)[flat]
+        synced, overflow, _ = sync_grads(
+            grads, cfg, mc, sync, hier_plan, sparse_plan, edges, tokens,
+            merge=sync_merge, wire=sync_wire, ef=None, repl_weight=repl_w,
+            dp_logical=dp_logical, overlap=sync_overlap,
+            bucket_bytes=sync_bucket_bytes)
+        return synced, overflow
+
+    sm = shard_map(body, mesh=mesh,
+                   in_specs=(pspec, dspec) + edge_specs,
+                   out_specs=(pspec, P()), check_vma=False)
+
+    def fn(grads, token_ids):
+        return sm(grads, token_ids, *(sparse_edges or ()))
+
+    return fn, pspec
+
+
 def train_fingerprint(cfg: ModelConfig, **settings) -> str:
     """Digest of everything that must match for a checkpoint to resume
     *exactly*: the model config plus caller-provided run settings (batch,
@@ -363,7 +610,9 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
                     sync_wire: str = "raw",
                     replication: int = 1,
                     dead: Optional[set] = None,
-                    retune: bool = False):
+                    retune: bool = False,
+                    sync_overlap: str = "off",
+                    sync_bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Returns (step_fn, specs) — step_fn is jit-compiled with shardings.
 
     step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
@@ -405,17 +654,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     first alive replica via ``contribution_weights``, so step results are
     unchanged by any ``dead`` set that leaves each group one alive member.
     Raises ``DeadLogicalNode`` otherwise (with r=1, on any failure).
+
+    ``sync_overlap="bucketed"`` (hier / sparse sync only) reschedules the
+    dense butterfly leaves into ``sync_bucket_bytes``-bounded buckets
+    issued stage-major, so gradient sync interleaves with the surrounding
+    compute instead of forming one monolithic collective chain — bitwise
+    identical results, same collective totals (see :func:`sync_grads`;
+    ARCHITECTURE.md "Overlap & scheduling"; CLI ``--sync-overlap``).
     """
-    from repro.core.allreduce import MERGE_MODES
-    from repro.core.topology import check_wire
-    if sync_merge not in MERGE_MODES:
-        raise ValueError(
-            f"sync_merge must be one of {MERGE_MODES}, got {sync_merge!r}")
-    check_wire(sync_wire)
-    if sync_wire != "raw" and sync != "sparse":
-        raise ValueError(
-            f"sync_wire={sync_wire!r} only applies to the sparse sync path "
-            f"(got sync={sync!r}); ring/hier sync is dense and unencoded")
+    _check_sync_settings(sync, sync_merge, sync_wire, sync_overlap)
     mc = mesh_ctx(mesh)
     ax = mc.axis_ctx(cfg)
     opt = opt or AdamW()
@@ -436,26 +683,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
     pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
     dspec = P(mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0])
 
-    sparse_plan = sparse_edges = None
-    hier_plan = None
-    if sync in ("hier", "sparse"):
-        hier_plan = default_dp_plan(mc, 8, 8, dp_degrees, retune=retune)
-    if sync == "sparse":
-        v_l = T.padded_vocab(cfg, mc.tp) // mc.tp
-        # in capacity: unique local rows <= min(tokens/device, vocab shard).
-        # Sizing to the actual batch sparsity is what makes the sparse path
-        # win (SPerf H1: worst-case capacities moved MORE bytes than ring).
-        cin = int(min(v_l, sparse_tokens_hint or (1 << 16)))
-        cin = (cin + 7) // 8 * 8
-        cout = (min(v_l, cin * mc.dp) + 7) // 8 * 8
-        sp_degrees = dp_degrees
-        if dp_degrees == "auto":
-            sp_degrees = tuned_dp_degrees(mc, cin, cout, retune=retune)
-        sparse_plan = make_device_plan(
-            [(a, mesh.shape[a]) for a in mc.dp_axes],
-            sp_degrees or {a: (mesh.shape[a],) for a in mc.dp_axes},
-            in_capacity=cin, out_capacity=cout)
-        sparse_edges = [jnp.asarray(e) for e in sparse_plan.edges_arrays()]
+    hier_plan, sparse_plan, sparse_edges = _build_sync_plans(
+        cfg, mc, mesh, sync, dp_degrees, sparse_tokens_hint, retune)
 
     # int8ef error-feedback carry: per-device sender state over the vocab
     # shard, [dp, V_pad, d] globally so every (data, model) device owns one
@@ -525,7 +754,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, *, sync: str = "ring",
         grads, overflow, new_ef = sync_grads(
             grads, cfg, mc, sync, hier_plan, sparse_plan, edges, tokens,
             merge=sync_merge, wire=sync_wire, ef=ef, repl_weight=repl_w,
-            dp_logical=dp_logical)
+            dp_logical=dp_logical, overlap=sync_overlap,
+            bucket_bytes=sync_bucket_bytes)
         gnorm = _sharded_grad_norm(grads, cfg, mc)
         new_params, new_opt, _ = opt.update(grads, opt_state, params,
                                             gnorm=gnorm)

@@ -128,6 +128,27 @@ def test_wire_flag_declared_and_documented():
             assert needle in text, f"{doc} must mention {needle}"
 
 
+def test_overlap_flag_declared_and_documented():
+    """The overlap knobs are argparse-declared and the docs book covers
+    the schedules: the bucketed stage-major sync + double-buffered engine
+    section in ARCHITECTURE, and the overlap-aware re-ranking (with its
+    direction-flip caveat and per-budget plan caching) in TUNING."""
+    declared = _declared_flags()
+    assert "--sync-overlap" in declared
+    assert "--sync-bucket-kb" in declared
+    for doc, needles in (
+            ("ARCHITECTURE.md", ("Overlap & scheduling", "--sync-overlap",
+                                 "plan_grad_buckets", "stage-major",
+                                 "audit_overlap_sync", "reduce_up_on_device",
+                                 "tests/test_overlap.py")),
+            ("TUNING.md", ("overlap_compute_s", "overlap_bucket",
+                           "rate_optimal_s", "--sync-overlap",
+                           "modeled_overlap_time"))):
+        text = _read(doc)
+        for needle in needles:
+            assert needle in text, f"{doc} must mention {needle}"
+
+
 def test_train_help_mentions_auto_and_engine():
     """The launcher's user-facing text must match reality: --dp-degrees
     documents the calibrated+cached 'auto' default (not the stale 'single

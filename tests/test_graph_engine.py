@@ -163,6 +163,45 @@ def test_engine_one_dispatch_per_run(graph_small):
     assert rep["reduce_collectives_per_round"] == 2 * rep["butterfly_depth"]
 
 
+def test_engine_one_dispatch_per_run_overlap(graph_small):
+    """The amortization contract survives the double-buffered schedule:
+    a ``run(k)`` on an ``overlap=True`` engine is still one dispatch with
+    the rotated body traced once (the reduce *halves* each appear twice
+    per build — prologue/epilogue plus the scanned body — but never per
+    round), and re-running a cached k re-traces nothing.  k=1 falls back
+    to the synchronous body."""
+    from repro.graph.engine import GraphEngine
+    edges, n = graph_small
+    parts = build_partitions(edges, n, 1)
+    base, extras, p0 = make_pagerank_engine(parts, n, degrees=())
+    engine = GraphEngine(base.out_sets, base.in_sets, base.app,
+                         degrees=(), overlap=True)
+    down_traces, up_traces = [], []
+    orig_down = engine.planned.reduce_down_on_device
+    orig_up = engine.planned.reduce_up_on_device
+    engine.planned.reduce_down_on_device = \
+        lambda *a, **k: (down_traces.append(1), orig_down(*a, **k))[1]
+    engine.planned.reduce_up_on_device = \
+        lambda *a, **k: (up_traces.append(1), orig_up(*a, **k))[1]
+    engine.run(7, p0, extras)
+    assert engine.report == {"dispatches": 1, "rounds": 7, "step_traces": 1}
+    assert len(down_traces) == 2 and len(up_traces) == 2
+    engine.run(7, p0, extras)          # cached compile: no new trace
+    assert engine.report == {"dispatches": 2, "rounds": 14, "step_traces": 1}
+    assert len(down_traces) == 2 and len(up_traces) == 2
+    engine.run(3, p0, extras)          # new k: one more build
+    assert engine.report == {"dispatches": 3, "rounds": 17, "step_traces": 2}
+    assert len(down_traces) == 4 and len(up_traces) == 4
+    rep = engine.sync_report()
+    assert rep["overlap"] is True
+    assert rep["host_roundtrips"] == 3
+    # k=1 has nothing to rotate: the synchronous fallback body runs
+    # (reduce_on_device composes the same halves, once each)
+    engine.run(1, p0, extras)
+    assert engine.report == {"dispatches": 4, "rounds": 18, "step_traces": 3}
+    assert len(down_traces) == 5 and len(up_traces) == 5
+
+
 def test_engine_pagerank_single_node_matches_dense(graph_small):
     edges, n = graph_small
     ref = pagerank_dense_reference(edges, n, iters=8)
