@@ -34,13 +34,14 @@ def main(argv=None) -> None:
     from benchmarks.bench_autotune import ALL_BENCHES as AUTOTUNE_BENCHES
     from benchmarks.bench_fault_tolerance import ALL_BENCHES as FAULT_BENCHES
     from benchmarks.bench_overlap import ALL_BENCHES as OVERLAP_BENCHES
+    from benchmarks.bench_serve import ALL_BENCHES as SERVE_BENCHES
     from benchmarks.bench_soak import ALL_BENCHES as SOAK_BENCHES
     from benchmarks.bench_wire import ALL_BENCHES as WIRE_BENCHES
     from benchmarks.paper_benches import ALL_BENCHES
     wanted = [s for s in args.only.split(",") if s]
     benches = [b for b in ALL_BENCHES + FAULT_BENCHES + AUTOTUNE_BENCHES
                + ANALYSIS_BENCHES + SOAK_BENCHES + WIRE_BENCHES
-               + OVERLAP_BENCHES
+               + OVERLAP_BENCHES + SERVE_BENCHES
                if not wanted or any(s in b.__name__ for s in wanted)]
     print("name,us_per_call,derived")
     records = []

@@ -431,3 +431,51 @@ def audit_callable(name: str, fn, *example_args,
             detail="informational"))
     checks += base_checks(jaxpr)
     return AuditReport(target=name, checks=checks)
+
+
+def audit_serve_decode(name: str, fn, *example_args,
+                       vocab: int) -> AuditReport:
+    """The serving tier's no-vocab-transfer contract (ISSUE 10 bugfix).
+
+    The decode loop's only host transfers are the jitted step's outputs,
+    so the contract "transfer token ids, never logits" is exactly a
+    property of the traced output signature: trace ``fn`` (a fused
+    decode+greedy step from ``make_decode_greedy_step`` /
+    ``make_prefill_greedy_step``) and assert
+
+    * **no vocab-sized float output** — no floating output aval of rank
+      <= 2 whose trailing axis is >= ``vocab``.  Gathered logits are
+      ``[B, V_pad]`` (rank 2, trailing >= vocab); cache/state leaves are
+      rank >= 3 with a leading periods axis, so they can legitimately
+      contain vocab-sized inner dims (e.g. a mamba conv tail of width
+      2*d) without tripping this.
+    * **token ids are integers** — at least one integer output exists
+      (the ids the host loop is supposed to consume).
+    * :func:`base_checks` — no host callbacks / transfers hidden inside
+      the program, no f64, stable scan carries.
+    """
+    import jax
+    closed = jax.make_jaxpr(fn)(*example_args)
+    jaxpr = closed.jaxpr
+    bad = []
+    has_int_out = False
+    for v in jaxpr.outvars:
+        aval = getattr(v, "aval", None)
+        shape = tuple(getattr(aval, "shape", ()))
+        dt = str(getattr(aval, "dtype", ""))
+        if dt.startswith("int") or dt.startswith("uint"):
+            has_int_out = True
+        if dt.startswith("float") and 1 <= len(shape) <= 2 \
+                and shape[-1] >= vocab:
+            bad.append(f"float[{','.join(map(str, shape))}]")
+    checks = [
+        CheckResult("no_vocab_sized_float_output", not bad,
+                    expected=[], actual=bad,
+                    detail="the decode loop must transfer token ids, "
+                           "never (padded-)vocab logits"),
+        CheckResult("token_ids_output_is_integer", has_int_out,
+                    expected=True, actual=has_int_out,
+                    detail="greedy sampling happens on device"),
+    ]
+    checks += base_checks(jaxpr)
+    return AuditReport(target=name, checks=checks)

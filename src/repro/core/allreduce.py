@@ -173,6 +173,26 @@ def _round8(x: int) -> int:
     return max(8, ((x + 7) // 8) * 8)
 
 
+def shape_bucket(n: int, floor: int = 8) -> int:
+    """Round a capacity up to the next power of two (at least ``floor``).
+
+    Serving-tier plan resolution (``repro.serve.dispatch``): continuous
+    batching churns the per-step unique-index count, and every distinct
+    ``union_reduce`` capacity is a distinct compiled pipeline in
+    ``SparseAllreduce._union_cache``.  Bucketing capacities to powers of
+    two bounds the cache at O(log range) entries, so after warmup nearly
+    every step is a plan-cache hit (benchmarks/bench_serve.py reports the
+    hit rate; acceptance floor 0.8)."""
+    if n < 0:
+        raise ValueError(f"shape_bucket: capacity must be >= 0, got {n}")
+    if floor < 1:
+        raise ValueError(f"shape_bucket: floor must be >= 1, got {floor}")
+    b = int(floor)
+    while b < n:
+        b <<= 1
+    return b
+
+
 # Per-layer merge strategies for the union allreduce (see
 # sparse_allreduce_union docstring; "fused"/"banded" are the Pallas modes
 # of repro.kernels.ops.merge_sorted_runs).

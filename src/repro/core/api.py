@@ -139,6 +139,12 @@ class SparseAllreduce:
         self._u_cap = None
         self._in_lens = None
         self._union_cache = {}
+        # union-path plan resolution counters (serving tier / benches):
+        # a "hit" reuses a compiled union pipeline from _union_cache, a
+        # "miss" plans + traces a new one.  Cumulative over the instance
+        # lifetime (reconfig_dead clears the cache, so calls after it
+        # miss again until re-trace).
+        self.union_plan_stats = {"hits": 0, "misses": 0}
         self._staging = None
         self._stage_rows = self._stage_cols = None
         self._first_alive = None
@@ -393,7 +399,10 @@ class SparseAllreduce:
         key = (idx.shape, val.shape, val.dtype, out_capacity, use_kernel,
                frozenset(self.dead or ()), self.wire)
         fn = self._union_cache.get(key)
-        if fn is None:
+        if fn is not None:
+            self.union_plan_stats["hits"] += 1
+        else:
+            self.union_plan_stats["misses"] += 1
             mesh = self.mesh
             if mesh is None:
                 mesh = jax.make_mesh((m_phys,), ("nodes",))

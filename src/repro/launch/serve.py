@@ -1,12 +1,26 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: continuous-batching decode with admission control
+(ARCHITECTURE.md "Serving tier").
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --reduced --requests 4 --prompt-len 32 --gen 16
+        --reduced --requests 4 --prompt-len 32 --gen 16 --slots 4
+
+Thin CLI over ``repro.serve``: a Zipf request stream
+(``repro.serve.service.zipf_request_stream``) runs through the
+:class:`~repro.serve.queue.AdmissionController` (``--rate`` /
+``--burst`` / ``--queue-cap`` / ``--slo-steps``; rate 0 disables
+admission) into the :class:`~repro.serve.scheduler.ContinuousBatchingScheduler`
+(``--slots``), with the sparse exchange path enabled by
+``--sparse-dispatch`` (``--wire`` / ``--head-size`` knobs; see
+``repro.serve.dispatch``).  Token sampling is greedy *on device* — only
+int32 ids cross to host (``repro.analysis.auditor.audit_serve_decode``).
+
+Encoder/vision archs (whisper, internvl) have no per-request cross-state
+isolation in the slot cache, so they serve through the legacy
+fixed-batch loop below — also on the fused greedy steps.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -14,37 +28,16 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.models import transformer as T
-from repro.train.step import (make_decode_step, make_prefill_step, mesh_ctx)
+from repro.train.step import (make_decode_greedy_step,
+                              make_prefill_greedy_step, mesh_ctx)
 
 
-def greedy_token(local_logits: np.ndarray, mesh, vocab: int) -> np.ndarray:
-    """argmax over the (model-sharded, gathered-by-jit-output) vocab."""
-    lg = np.asarray(local_logits)[:, :vocab]
-    return np.argmax(lg, axis=-1).astype(np.int32)
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCHS))
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--model-axis", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev // args.model_axis, args.model_axis),
-                         ("data", "model"))
+def _fixed_batch_generate(cfg, mesh, params, args) -> np.ndarray:
+    """Legacy fixed-batch prefill+decode for encoder/vision archs."""
     mc = mesh_ctx(mesh)
     max_seq = args.prompt_len + args.gen + (cfg.img_tokens or 0)
-    params = T.init_params(cfg, mc.tp, seed=args.seed)
-    prefill, _ = make_prefill_step(cfg, mesh, max_seq=max_seq)
-    decode, _ = make_decode_step(cfg, mesh)
+    prefill, _ = make_prefill_greedy_step(cfg, mesh, max_seq=max_seq)
+    decode, _ = make_decode_greedy_step(cfg, mesh)
 
     rng = np.random.RandomState(args.seed)
     b = args.requests
@@ -57,9 +50,7 @@ def main(argv=None):
         batch["enc_frames"] = jnp.asarray(
             rng.randn(b, cfg.enc_seq, cfg.d_model), jnp.float32)
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    print(f"prefill {b}x{args.prompt_len}: {time.time()-t0:.2f}s")
+    tok, cache = prefill(params, batch)
 
     extra = ()
     if cfg.enc_layers:
@@ -77,19 +68,112 @@ def main(argv=None):
         extra = (ccfn(params, batch["enc_frames"]),)
 
     pos0 = args.prompt_len + (cfg.img_tokens or 0)
-    tok = jnp.asarray(greedy_token(logits, mesh, cfg.vocab))
     outputs = [np.asarray(tok)]
-    t0 = time.time()
     for i in range(args.gen - 1):
         pos = jnp.full((b,), pos0 + i, jnp.int32)
-        logits, cache = decode(params, tok, pos, cache, *extra)
-        tok = jnp.asarray(greedy_token(logits, mesh, cfg.vocab))
+        tok, cache = decode(params, tok, pos, cache, *extra)
         outputs.append(np.asarray(tok))
-    dt = time.time() - t0
-    gen = np.stack(outputs, axis=1)
-    print(f"decode {args.gen-1} steps: {dt:.2f}s "
-          f"({b*(args.gen-1)/max(dt,1e-9):.1f} tok/s)")
-    print("generated ids[0]:", gen[0][:12])
+    return np.stack(outputs, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous-batching slot count (0: auto — up to "
+                         "8, rounded to the data-axis size)")
+    ap.add_argument("--alpha", type=float, default=1.2,
+                    help="Zipf exponent of the request-stream prompts")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="token-bucket admit rate in requests/step "
+                         "(0: admission control off)")
+    ap.add_argument("--burst", type=float, default=4.0,
+                    help="token-bucket burst capacity")
+    ap.add_argument("--queue-cap", type=int, default=16,
+                    help="bounded-queue capacity (beyond it: load shed)")
+    ap.add_argument("--slo-steps", type=float, default=64.0,
+                    help="latency SLO in decode steps (circuit breaker)")
+    ap.add_argument("--breach-window", type=int, default=8,
+                    help="consecutive SLO breaches before the breaker trips")
+    ap.add_argument("--cooldown-steps", type=float, default=32.0,
+                    help="breaker open->half-open cooldown in steps")
+    ap.add_argument("--sparse-dispatch", action="store_true",
+                    help="route token/expert statistics through "
+                         "SparseAllreduce (repro.serve.dispatch)")
+    ap.add_argument("--wire", default="raw",
+                    help="wire codec for the dispatch tail union "
+                         "(raw | delta | delta+bf16 | delta+int8ef)")
+    ap.add_argument("--head-size", type=int, default=64,
+                    help="Zipf hot-set size for the frozen dispatch plan")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev // args.model_axis, args.model_axis),
+                         ("data", "model"))
+    mc = mesh_ctx(mesh)
+    params = T.init_params(cfg, mc.tp, seed=args.seed)
+
+    if cfg.enc_layers or cfg.img_tokens:
+        gen = _fixed_batch_generate(cfg, mesh, params, args)
+        print(f"fixed-batch {args.arch}: {gen.shape[0]} requests x "
+              f"{gen.shape[1]} tokens")
+        print("generated ids[0]:", gen[0][:12])
+        return gen
+
+    from repro.serve import (AdmissionController,
+                             ContinuousBatchingScheduler, DecodeService,
+                             zipf_request_stream)
+    slots = args.slots or max(mc.dp, min(args.requests, 8)
+                              // mc.dp * mc.dp or mc.dp)
+    max_seq = args.prompt_len + args.gen + 1
+    dispatch = None
+    if args.sparse_dispatch:
+        from repro.serve.dispatch import SparseServeDispatch
+        dispatch = SparseServeDispatch(
+            mc.dp, vocab=cfg.vocab, n_experts=cfg.n_experts,
+            wire=args.wire, seed=args.seed + 1)
+    sched = ContinuousBatchingScheduler(
+        cfg, mesh, params, slots=slots, max_seq=max_seq, dispatch=dispatch)
+    admission = None
+    if args.rate > 0:
+        admission = AdmissionController(
+            rate=args.rate, burst=args.burst, queue_cap=args.queue_cap,
+            slo=args.slo_steps, breach_window=args.breach_window,
+            cooldown=args.cooldown_steps)
+    reqs = zipf_request_stream(
+        args.requests, cfg.vocab, alpha=args.alpha,
+        prompt_lens=(args.prompt_len,), max_new=(args.gen, args.gen),
+        seed=args.seed)
+    if dispatch is not None:
+        warm = np.concatenate([np.asarray(r.prompt).reshape(-1)
+                               for r in reqs])
+        dispatch.fit_hot_set(warm, head_size=args.head_size)
+    report = DecodeService(sched, admission).run(reqs)
+    done = sorted(report.completed, key=lambda r: r.rid)
+    gen = np.asarray([r.tokens for r in done], np.int32) if done \
+        else np.zeros((0, args.gen), np.int32)
+    print(f"served {len(done)}/{args.requests} requests in {report.steps} "
+          f"steps ({report.tokens_per_s:.1f} tok/s wall); "
+          f"p50={report.p50_steps:.0f} p99={report.p99_steps:.0f} steps")
+    if admission is not None:
+        s = admission.stats
+        print(f"admission: offered={s.offered} admitted={s.admitted} "
+              f"shed(rate/queue/breaker)="
+              f"{s.shed_rate}/{s.shed_queue}/{s.shed_breaker}")
+    if dispatch is not None:
+        print(f"dispatch: plan hit rate {dispatch.plan_hit_rate:.2f} over "
+              f"{dispatch.plan_resolutions} resolutions")
+    if len(gen):
+        print("generated ids[0]:", gen[0][:12])
     return gen
 
 

@@ -34,6 +34,27 @@ def moe_params(key, cfg: ModelConfig, tp: int, dtype):
     }
 
 
+def router_topk(logits: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared routing decision: mask padded experts, softmax, top-k,
+    renormalize the kept weights.
+
+    ``logits``: [..., E_pad] raw router scores (fp32).  Returns
+    ``(probs [..., E_pad], wk [..., K], ek [..., K])``.  One definition
+    for the three places a token meets a router — the expert-parallel
+    training block (:func:`moe_ffn`), the 2D weight-stationary decode
+    block (``repro.models.serve2d.moe_ffn_2d``) and the serving tier's
+    dispatch-load predictor (``repro.serve.dispatch``) — so the serving
+    path's expert-load exchange counts exactly the experts the model
+    would dispatch to."""
+    e_pad = logits.shape[-1]
+    logits = jnp.where(jnp.arange(e_pad) < cfg.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    wk, ek = lax.top_k(probs, cfg.top_k)
+    wk = wk / jnp.maximum(jnp.sum(wk, axis=-1, keepdims=True), 1e-9)
+    return probs, wk, ek
+
+
 def _group_by(dest: jax.Array, num_groups: int, cap: int):
     """Slot assignment: entry i -> (dest_i, rank of i within dest_i).
 
@@ -80,11 +101,8 @@ def moe_ffn(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str, tp: int,
         n = n_full
 
     # ---- route -------------------------------------------------------------
-    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
-    logits = jnp.where(jnp.arange(e_pad) < cfg.n_experts, logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    wk, ek = lax.top_k(probs, k_top)                       # [N, K]
-    wk = wk / jnp.maximum(jnp.sum(wk, axis=-1, keepdims=True), 1e-9)
+    probs, wk, ek = router_topk(
+        jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"]), cfg)
     # switch-style load-balance aux
     me = jnp.mean(probs, axis=0)
     ce = jnp.mean(jax.nn.one_hot(ek[:, 0], e_pad), axis=0)

@@ -24,7 +24,7 @@ from jax import lax
 from .attention import (_batch_replicate, _batch_slice, _col_matmul_2d,
                         _row_matmul_2d)
 from .common import ModelConfig, act_fn
-from .moe import _group_by
+from .moe import _group_by, router_topk
 
 
 def _dp_index(dp_axes, mesh_sizes):
@@ -44,7 +44,6 @@ def moe_ffn_2d(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str,
     """
     b_loc, _, d = x.shape
     el = cfg.experts_local(tp)
-    e_pad = cfg.n_experts_padded(tp)
     k_top = cfg.top_k
     dpi = _dp_index(dp_axes, mesh_sizes)
     dl = p["router"].shape[0]                       # d/dp
@@ -53,12 +52,9 @@ def moe_ffn_2d(p: Dict, x: jax.Array, cfg: ModelConfig, tp_axis: str,
     n_full = xf.shape[0]
 
     # ---- route (replicated logits => identical top-k on every rank) -------
-    logits = _col_matmul_2d(xf.astype(jnp.float32),
-                            p["router"].astype(jnp.float32), dp_axes, dpi)
-    logits = jnp.where(jnp.arange(e_pad) < cfg.n_experts, logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    wk, ek = lax.top_k(probs, k_top)
-    wk = wk / jnp.maximum(jnp.sum(wk, axis=-1, keepdims=True), 1e-9)
+    _, wk, ek = router_topk(
+        _col_matmul_2d(xf.astype(jnp.float32),
+                       p["router"].astype(jnp.float32), dp_axes, dpi), cfg)
 
     # ---- token-shard over tp, dispatch d/dp slices -------------------------
     n = -(-n_full // tp)

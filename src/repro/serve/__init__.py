@@ -1,0 +1,31 @@
+"""Sparse-allreduce-backed serving tier (ARCHITECTURE.md "Serving tier").
+
+Continuous-batching decode over the existing model stack, with admission
+control in front and the paper's sparse exchange underneath:
+
+  * :mod:`repro.serve.queue`      — token bucket, bounded FIFO, circuit
+    breaker, and the :class:`~repro.serve.queue.AdmissionController`
+    composing them (deterministic injected clock, no sleeps).
+  * :mod:`repro.serve.scheduler`  — slot-based continuous batching
+    (join-on-free-slot prefill, evict-on-EOS) over the fused greedy
+    prefill/decode steps from ``repro.train.step``.
+  * :mod:`repro.serve.dispatch`   — the Zipf token/expert exchange routed
+    through ``SparseAllreduce``: frozen-plan hot set + shape-bucketed
+    union path for the tail.
+  * :mod:`repro.serve.service`    — the virtual-clock service loop tying
+    admission to the scheduler, plus the Zipf request-stream generator.
+
+Request-level correctness (continuous-batched == sequential oracle,
+token for token) is proven by ``tests/test_serve_tier.py``; service
+behaviour under load by ``benchmarks/bench_serve.py``.
+"""
+from .queue import (AdmissionController, BoundedQueue, CircuitBreaker,
+                    Request, TokenBucket)
+from .scheduler import ContinuousBatchingScheduler
+from .service import DecodeService, zipf_request_stream
+
+__all__ = [
+    "AdmissionController", "BoundedQueue", "CircuitBreaker", "Request",
+    "TokenBucket", "ContinuousBatchingScheduler", "DecodeService",
+    "zipf_request_stream",
+]

@@ -1,0 +1,226 @@
+"""Slot-based continuous batching over the fused greedy decode steps.
+
+A fixed number of batch ``slots`` is compiled once (one decode program
+per slot count); requests join a free slot via a per-request prefill and
+leave on EOS / ``max_new`` (evict-on-EOS), so decode never waits for the
+longest request in a batch — the standard continuous-batching shape, on
+top of ``repro.train.step.make_prefill_greedy_step`` /
+``make_decode_greedy_step``.
+
+Correctness story (proven request-level in ``tests/test_serve_tier.py``):
+
+  * A request's decode rows are *bitwise independent* of what the other
+    slots hold: attention masks by position, prefill fully overwrites a
+    slot's cache/state slice, and per-row compute never crosses the batch
+    axis.  So continuous batching returns token-for-token the ids the
+    sequential one-request-at-a-time oracle returns — **when both run
+    through the same compiled slot geometry**.  Different batch sizes
+    compile different programs whose accumulation order may differ in the
+    last ulp, which is why the oracle is "one request at a time through
+    the same scheduler", not a separate batch-1 program.
+  * Join prefill on a data-sharded mesh tiles the prompt to ``dp`` rows
+    (prefill batch must divide the data axis) and writes row 0 into the
+    slot; tiled prefill rows are bitwise identical.
+
+Host <-> device traffic per step is ``O(slots)`` int32 ids — never the
+vocab-sized logits (``audit_serve_decode`` pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.common import ModelConfig
+from repro.train.step import (_ns, init_cache_global,
+                              make_decode_greedy_step,
+                              make_prefill_greedy_step, mesh_ctx)
+
+from .queue import Request
+
+
+@dataclasses.dataclass
+class SchedulerMetrics:
+    """Counters the service and benches report from."""
+    decode_steps: int = 0
+    joins: int = 0
+    evictions: int = 0
+    tokens_out: int = 0
+
+
+def _write_slot(cache, pcache, slot):
+    """Write prefill cache row 0 into batch index ``slot`` of every leaf
+    (batch axis is 1 on all cache leaves: [n_periods, B, ...])."""
+    return jax.tree.map(
+        lambda c, n: lax.dynamic_update_index_in_dim(
+            c, n[:, 0].astype(c.dtype), slot, 1), cache, pcache)
+
+
+class ContinuousBatchingScheduler:
+    """Continuous-batching decode over ``slots`` compiled batch rows.
+
+    Decoder-only configs (no encoder / image prefix): the serving tier
+    batches requests with nothing in common, so there is no shared
+    cross-cache to carry.  ``slots`` must be a multiple of the mesh's
+    data-axis size (batch rows shard contiguously over data).
+
+    ``dispatch`` (optional, :class:`repro.serve.dispatch.SparseServeDispatch`)
+    is fed the active slots' current token ids — grouped by owning data
+    shard — every ``dispatch_every`` decode steps; it only *observes* the
+    token stream (load/popularity exchange), it never perturbs it.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh, params, *, slots: int,
+                 max_seq: int, dispatch=None, dispatch_every: int = 1):
+        if cfg.enc_layers or cfg.img_tokens:
+            raise ValueError(
+                "continuous batching serves decoder-only configs; "
+                "encoder/vision archs use the fixed-batch path "
+                "(repro.launch.serve)")
+        mc = mesh_ctx(mesh)
+        if slots < 1 or slots % mc.dp:
+            raise ValueError(
+                f"slots={slots} must be a positive multiple of the data "
+                f"axis size dp={mc.dp} (batch rows shard over data)")
+        if dispatch is not None and dispatch.num_shards != mc.dp:
+            raise ValueError(
+                f"dispatch has {dispatch.num_shards} shards, mesh has "
+                f"dp={mc.dp}")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.dispatch = dispatch
+        self.dispatch_every = max(1, int(dispatch_every))
+        self.metrics = SchedulerMetrics()
+        self._mc = mc
+        self._prefill, _ = make_prefill_greedy_step(cfg, mesh, max_seq)
+        self._decode, dspecs = make_decode_greedy_step(cfg, mesh)
+        # pin the slot write's output sharding to the decode cache spec:
+        # an unconstrained jit would re-lay-out the cache on multi-device
+        # meshes and the decode pjit would reject it
+        self._write = jax.jit(
+            _write_slot, out_shardings=_ns(mesh, dspecs["cache"]))
+        self._cache = init_cache_global(cfg, mc, slots, max_seq)
+        self._tok = np.zeros(slots, np.int32)
+        self._pos = np.zeros(slots, np.int32)
+        self._reqs: List[Optional[Request]] = [None] * slots
+        self._completed: List[Request] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def active(self) -> int:
+        """Occupied slot count."""
+        return sum(r is not None for r in self._reqs)
+
+    def free_slots(self) -> List[int]:
+        """Indices of currently free slots (ascending)."""
+        return [s for s, r in enumerate(self._reqs) if r is None]
+
+    def pop_completed(self) -> List[Request]:
+        """Drain requests finished since the last call (join or step)."""
+        out, self._completed = self._completed, []
+        return out
+
+    def reset(self) -> None:
+        """Clear all slots and counters, keeping the compiled programs.
+
+        Stale cache contents are harmless by construction — prefill
+        overwrites a joining slot's entire cache/state slice and decode
+        attends only positions this request wrote — which is exactly what
+        the consistency harness proves when it reuses one scheduler for
+        the batched run and the sequential oracle."""
+        self._tok[:] = 0
+        self._pos[:] = 0
+        self._reqs = [None] * self.slots
+        self._completed = []
+        self.metrics = SchedulerMetrics()
+
+    # ------------------------------------------------------------------
+    def join(self, req: Request) -> int:
+        """Prefill ``req`` into the lowest free slot; returns the slot.
+
+        The prompt is tiled to ``dp`` rows (prefill batch must divide the
+        data axis) and row 0 of the resulting cache is written into the
+        slot.  The prefill's greedy next token is the request's first
+        generated id; a ``max_new=1`` request completes here without ever
+        entering the decode batch."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("join() with no free slot")
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if len(prompt) + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(prompt)} + max_new "
+                f"{req.max_new} exceeds max_seq {self.max_seq}")
+        slot = free[0]
+        bp = self._mc.dp
+        toks = jnp.asarray(np.tile(prompt[None], (bp, 1)))
+        ids, pcache = self._prefill(self.params, {"tokens": toks})
+        self._cache = self._write(self._cache, pcache, jnp.int32(slot))
+        first = int(np.asarray(ids)[0])
+        req.tokens.append(first)
+        self.metrics.joins += 1
+        self.metrics.tokens_out += 1
+        if req.done():
+            self._evict_into_completed(req, slot, occupied=False)
+        else:
+            self._reqs[slot] = req
+            self._tok[slot] = first
+            self._pos[slot] = len(prompt)
+        return slot
+
+    def step(self) -> None:
+        """One fused decode step over all slots (no-op when idle).
+
+        Each active slot consumes its pending token at its position and
+        produces the next greedy id; free slots decode garbage rows whose
+        results are discarded (bitwise independence makes them harmless,
+        and their positions are pinned at 0 so nothing grows unbounded).
+        Completions are queued for :meth:`pop_completed`."""
+        if self.active == 0:
+            return
+        if self.dispatch is not None \
+                and self.metrics.decode_steps % self.dispatch_every == 0:
+            self.dispatch.on_step(self._active_tokens_by_shard())
+        ids, self._cache = self._decode(
+            self.params, jnp.asarray(self._tok), jnp.asarray(self._pos),
+            self._cache)
+        ids = np.asarray(ids)
+        self.metrics.decode_steps += 1
+        for slot, req in enumerate(self._reqs):
+            if req is None:
+                continue
+            tok = int(ids[slot])
+            req.tokens.append(tok)
+            self.metrics.tokens_out += 1
+            if req.done():
+                self._evict_into_completed(req, slot, occupied=True)
+            else:
+                self._tok[slot] = tok
+                self._pos[slot] += 1
+
+    def _evict_into_completed(self, req: Request, slot: int,
+                              occupied: bool) -> None:
+        if occupied:
+            self._reqs[slot] = None
+            self.metrics.evictions += 1
+        self._tok[slot] = 0
+        self._pos[slot] = 0
+        self._completed.append(req)
+
+    def _active_tokens_by_shard(self) -> List[np.ndarray]:
+        """Current input ids of active slots, grouped by the data shard
+        that owns each contiguous slot block."""
+        per = self.slots // self._mc.dp
+        out = []
+        for n in range(self._mc.dp):
+            sl = [self._tok[s] for s in range(n * per, (n + 1) * per)
+                  if self._reqs[s] is not None]
+            out.append(np.asarray(sl, np.int32))
+        return out

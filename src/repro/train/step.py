@@ -898,3 +898,102 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, *, seq_sharded: bool = False,
     jit_kw = dict(in_shardings=tuple(_ns(mesh, s) for s in in_specs),
                   out_shardings=(_ns(mesh, lspec), _ns(mesh, cspec)))
     return jax.jit(sm, **jit_kw), dict(params=pspec, cache=cspec)
+
+
+def _greedy_ids(logits: jax.Array, vocab: int) -> jax.Array:
+    """On-device greedy sampling over gathered ``[B, V_pad]`` logits.
+
+    The padding columns (``vocab <= j < V_pad``) are exactly zero under
+    tied embeddings (zero-initialized pad rows), which can beat
+    all-negative real logits — so they are masked to ``-inf`` before the
+    argmax, not sliced on host.  Returns int32 ``[B]`` token ids: the
+    only thing the serving loop ever transfers
+    (``repro.analysis.auditor.audit_serve_decode`` pins this)."""
+    v_pad = logits.shape[-1]
+    masked = jnp.where(jnp.arange(v_pad) < vocab,
+                       logits.astype(jnp.float32), -jnp.inf)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_greedy_step(cfg: ModelConfig, mesh: Mesh, max_seq: int):
+    """Fused prefill + on-device greedy: (params, batch) -> (ids, cache).
+
+    ``ids`` is int32 ``[B]`` — the greedy next token after the prompt.
+    Same trace as :func:`make_prefill_step` with :func:`_greedy_ids`
+    fused at the jit level, so the vocab-sized logits never leave the
+    device (the serving tier's fix for the per-step host logits copy)."""
+    mc = mesh_ctx(mesh)
+    ax = mc.axis_ctx(cfg)
+    pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    dp = mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0]
+    dspec = P(dp)
+    batch_specs = {"tokens": dspec}
+    if cfg.img_tokens:
+        batch_specs["img_embeds"] = dspec
+    if cfg.enc_layers:
+        batch_specs["enc_frames"] = dspec
+
+    def body(params, batch):
+        return T.forward_prefill(params, batch["tokens"], cfg, ax, max_seq,
+                                 enc_frames=batch.get("enc_frames"),
+                                 extra_embeds=batch.get("img_embeds"))
+
+    cspec = cache_pspec(cfg, mc, False)
+    sm = shard_map(body, mesh=mesh, in_specs=(pspec, batch_specs),
+                   out_specs=(P(dp, "model"), cspec), check_vma=False)
+
+    def fn(params, batch):
+        logits, cache = sm(params, batch)
+        return _greedy_ids(logits, cfg.vocab), cache
+
+    jit_kw = dict(in_shardings=(_ns(mesh, pspec), _ns(mesh, batch_specs)),
+                  out_shardings=(_ns(mesh, P(dp)), _ns(mesh, cspec)))
+    return jax.jit(fn, **jit_kw), dict(params=pspec, batch=batch_specs)
+
+
+def make_decode_greedy_step(cfg: ModelConfig, mesh: Mesh, *,
+                            seq_sharded: bool = False, seq_shards: int = 1,
+                            serve2d: bool = False):
+    """Fused decode + on-device greedy: (params, token, pos, cache
+    [, cross_cache]) -> (ids, new cache).
+
+    The continuous-batching scheduler's step function
+    (``repro.serve.scheduler``): one jitted program per slot-count
+    bucket, int32 ``[B]`` ids out — no vocab-sized aval in the output
+    signature (audited by ``audit_serve_decode``)."""
+    mc = mesh_ctx(mesh)
+    ax = mc.axis_ctx(cfg)
+    pspec = full_model_pspec(cfg, mc.tp, mc.dp_axes)
+    dp = mc.dp_axes if len(mc.dp_axes) > 1 else mc.dp_axes[0]
+    bspec = P(None) if seq_sharded else P(dp)
+    cspec = cache_pspec(cfg, mc, seq_sharded)
+    lspec = P(None, "model") if seq_sharded else P(dp, "model")
+
+    cross_spec = None
+    if cfg.enc_layers:
+        cross_spec = (P(None, dp, None, "model", None),
+                      P(None, dp, None, "model", None))
+
+    mesh_sizes = dict(mesh.shape)
+
+    def body(params, token, pos, cache, *cross):
+        cc = cross[0] if cross else None
+        return T.forward_decode(
+            params, token, pos, cache, cfg, ax,
+            seq_axis="data" if seq_sharded else None,
+            seq_shards=seq_shards, cross_cache=cc,
+            serve2d=serve2d, mesh_sizes=mesh_sizes)
+
+    in_specs = (pspec, bspec, bspec, cspec)
+    if cfg.enc_layers:
+        in_specs = in_specs + (cross_spec,)
+    sm = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(lspec, cspec), check_vma=False)
+
+    def fn(params, token, pos, cache, *cross):
+        logits, new_cache = sm(params, token, pos, cache, *cross)
+        return _greedy_ids(logits, cfg.vocab), new_cache
+
+    jit_kw = dict(in_shardings=tuple(_ns(mesh, s) for s in in_specs),
+                  out_shardings=(_ns(mesh, bspec), _ns(mesh, cspec)))
+    return jax.jit(fn, **jit_kw), dict(params=pspec, cache=cspec)

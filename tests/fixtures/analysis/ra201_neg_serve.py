@@ -1,0 +1,25 @@
+"""Fixture: RA201 negative, serving-tier shaped — the scheduler's real
+pattern: greedy argmax fused on device, host code syncs only the int32
+ids *after* the dispatch returns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _decode_body(params, tok, pos, cache):
+    logits = params["emb"][tok] * jnp.float32(pos)
+    ids = jnp.argmax(logits, -1).astype(jnp.int32)
+    return ids, cache
+
+
+decode = jax.jit(_decode_body)
+
+
+def serve_loop(params, cache, steps):
+    # host-side driver: syncing the [slots] ids out here is the design
+    tok = jnp.zeros((2,), jnp.int32)
+    out = []
+    for i in range(steps):
+        tok, cache = decode(params, tok, jnp.int32(i), cache)
+        out.append(np.asarray(tok))
+    return np.stack(out)

@@ -1,0 +1,24 @@
+"""Fixture: RA201 positive, serving-tier shaped — host syncs inside the
+continuous-batching decode step (the inferred-hot region is the function
+handed to ``jax.jit`` at the call site, the scheduler's idiom)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _decode_body(params, tok, pos, cache):
+    logits = params["emb"][tok] * jnp.float32(pos)
+    host_logits = np.asarray(logits)  # expect: RA201
+    best = int(jnp.argmax(logits, -1).item())  # expect: RA201
+    jax.device_get(cache)  # expect: RA201
+    return jnp.int32(best + host_logits.shape[0]), cache
+
+
+decode = jax.jit(_decode_body)
+
+
+def serve_loop(params, cache, steps):
+    tok = jnp.zeros((2,), jnp.int32)
+    for i in range(steps):
+        tok, cache = decode(params, tok, jnp.int32(i), cache)
+    return tok

@@ -1,0 +1,224 @@
+"""Property tests for the serving tier's admission control
+(``repro.serve.queue``), on a deterministic fake clock — no sleeps, no
+wall time, every example replayable.
+
+The three contracts pinned here are the ones the service loop and the
+load benches assume:
+
+* **Token bucket**: over any window ``(t0, t1]`` of the call trace it
+  admits at most ``burst + rate * (t1 - t0)`` unit-cost requests — the
+  saturation bound the 2x-load bench relies on.
+* **Bounded queue**: FIFO is preserved, ``admitted + shed == offered``,
+  and occupancy never exceeds capacity.
+* **Circuit breaker**: trips only after ``breach_window`` *consecutive*
+  SLO breaches, always half-opens ``cooldown`` after a trip, and can
+  never deadlock refusing (the probe-loss re-arm makes ``allow`` return
+  True again within two cooldowns of any state whatsoever).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.queue import (AdmissionController, BoundedQueue,
+                               CircuitBreaker, Request, TokenBucket)
+
+
+def _req(rid: int) -> Request:
+    return Request(rid=rid, prompt=np.zeros(2, np.int32), max_new=2)
+
+
+# ---------------------------------------------------------------------------
+# Token bucket
+# ---------------------------------------------------------------------------
+
+@given(st.floats(min_value=0.05, max_value=8.0),
+       st.floats(min_value=1.0, max_value=10.0),
+       st.lists(st.floats(min_value=0.0, max_value=3.0),
+                min_size=1, max_size=60))
+@settings(max_examples=60)
+def test_token_bucket_window_bound(rate, burst, gaps):
+    """Admits inside any window (t0, t1] never exceed burst + rate*dt."""
+    tb = TokenBucket(rate, burst)
+    times = np.cumsum(np.asarray(gaps, np.float64))
+    admitted = [t for t in times if tb.admit(float(t))]
+    for i, t0 in enumerate(times):
+        for t1 in times[i:]:
+            n = sum(1 for t in admitted if t0 < t <= t1)
+            assert n <= burst + rate * (t1 - t0) + 1e-6, \
+                f"window ({t0}, {t1}]: {n} admits"
+
+
+@given(st.floats(min_value=0.1, max_value=4.0),
+       st.floats(min_value=1.0, max_value=6.0))
+def test_token_bucket_burst_then_starve_then_refill(rate, burst):
+    """At one instant only floor(burst) admits succeed; refill restores
+    rate*dt more, capped at burst."""
+    tb = TokenBucket(rate, burst)
+    first = sum(tb.admit(0.0) for _ in range(int(burst) + 5))
+    assert first == int(burst + 1e-9)
+    dt = 2.0 / rate  # two tokens of refill (before the burst cap)
+    later = sum(tb.admit(dt) for _ in range(10))
+    frac = burst - int(burst + 1e-9)         # tokens left after the burst
+    assert later == int(min(burst, frac + 2.0) + 1e-9)
+
+
+def test_token_bucket_clock_never_runs_backwards():
+    tb = TokenBucket(1.0, 1.0)
+    assert tb.admit(10.0)
+    # a stale clock must not mint tokens or crash
+    assert not tb.admit(5.0)
+    assert tb.admit(11.0)
+
+
+def test_token_bucket_validates():
+    with pytest.raises(ValueError):
+        TokenBucket(0.0, 4.0)
+    with pytest.raises(ValueError):
+        TokenBucket(1.0, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Bounded queue
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=8),
+       st.lists(st.booleans(), min_size=1, max_size=80))
+@settings(max_examples=60)
+def test_bounded_queue_fifo_and_accounting(cap, ops):
+    """True op = offer, False = pop: popped order is exactly admitted
+    order, admitted + shed == offered, occupancy <= capacity."""
+    q = BoundedQueue(cap)
+    seq = 0
+    accepted, popped = [], []
+    for is_offer in ops:
+        if is_offer:
+            if q.offer(seq):
+                accepted.append(seq)
+            seq += 1
+        else:
+            item = q.pop()
+            if item is not None:
+                popped.append(item)
+        assert len(q) <= cap
+        assert q.admitted + q.shed == q.offered == seq
+    assert popped == accepted[:len(popped)]
+    assert len(accepted) - len(popped) == len(q)
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=6),
+       st.lists(st.integers(min_value=0, max_value=1),
+                min_size=1, max_size=60))
+@settings(max_examples=60)
+def test_breaker_trips_only_on_consecutive_breaches(window, pattern):
+    """The breaker trips iff the trace contains `window` consecutive
+    breaches while closed; a single good completion resets the streak."""
+    br = CircuitBreaker(slo=10.0, breach_window=window, cooldown=5.0)
+    streak, should_trip = 0, False
+    for i, breach in enumerate(pattern):
+        br.record(float(i), 20.0 if breach else 1.0)
+        streak = streak + 1 if breach else 0
+        if streak >= window:
+            should_trip = True
+            break
+    assert (br.state == CircuitBreaker.OPEN) == should_trip
+    assert br.trips == int(should_trip)
+
+
+@given(st.floats(min_value=0.5, max_value=20.0))
+def test_breaker_always_half_opens_after_cooldown(cooldown):
+    br = CircuitBreaker(slo=1.0, breach_window=1, cooldown=cooldown)
+    br.record(0.0, 2.0)
+    assert br.state == CircuitBreaker.OPEN
+    assert not br.allow(cooldown * 0.5)          # still cooling
+    assert br.allow(cooldown + 1e-6)             # probe admitted
+    assert br.state == CircuitBreaker.HALF_OPEN
+
+
+def test_breaker_probe_successes_close_probe_breach_reopens():
+    br = CircuitBreaker(slo=1.0, breach_window=1, cooldown=4.0, probes=2)
+    br.record(0.0, 2.0)
+    assert br.allow(5.0) and br.allow(5.0)       # both probe slots
+    assert not br.allow(5.0)                     # budget spent
+    br.record(6.0, 0.5)
+    br.record(6.0, 0.5)
+    assert br.state == CircuitBreaker.CLOSED
+    # a breaching probe re-trips instead
+    br2 = CircuitBreaker(slo=1.0, breach_window=1, cooldown=4.0, probes=2)
+    br2.record(0.0, 2.0)
+    assert br2.allow(5.0)
+    br2.record(6.0, 3.0)
+    assert br2.state == CircuitBreaker.OPEN and br2.trips == 2
+
+
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                          st.floats(min_value=0.0, max_value=4.0),
+                          st.floats(min_value=0.0, max_value=30.0)),
+                min_size=0, max_size=60))
+@settings(max_examples=60)
+def test_breaker_never_deadlocks_closed(ops):
+    """Liveness: after ANY op trace, allow() returns True within two
+    cooldowns of the last event (lost probes re-arm; nothing wedges)."""
+    cooldown = 6.0
+    br = CircuitBreaker(slo=5.0, breach_window=2, cooldown=cooldown,
+                        probes=2)
+    t = 0.0
+    for kind, dt, lat in ops:
+        t += dt
+        if kind == 0:
+            br.allow(t)
+        else:
+            br.record(t, lat)
+    t1 = t + cooldown + 1e-3
+    ok = br.allow(t1) or br.allow(t1 + cooldown + 1e-3)
+    assert ok, f"breaker wedged in state {br.state}"
+
+
+# ---------------------------------------------------------------------------
+# The composed controller
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(min_value=0.0, max_value=2.0),
+                min_size=1, max_size=80))
+@settings(max_examples=40)
+def test_controller_accounting_is_total(gaps):
+    """Every offer lands in exactly one bucket of the stats."""
+    adm = AdmissionController(rate=0.7, burst=2.0, queue_cap=3, slo=8.0)
+    t = 0.0
+    for i, dt in enumerate(gaps):
+        t += dt
+        reason = adm.offer(_req(i), t)
+        assert reason in ("admitted", "shed_rate", "shed_queue",
+                          "shed_breaker")
+    s = adm.stats
+    assert s.offered == len(gaps)
+    assert s.admitted + s.shed == s.offered
+    assert adm.pending() <= 3
+
+
+def test_controller_checks_breaker_before_spending_tokens():
+    """An open breaker sheds without consuming rate tokens: once it
+    half-opens, the full burst is still available."""
+    adm = AdmissionController(rate=0.001, burst=2.0, queue_cap=8,
+                              slo=1.0, breach_window=1, cooldown=10.0)
+    adm.breaker.record(0.0, 5.0)             # trip immediately
+    for i in range(4):
+        assert adm.offer(_req(i), 1.0) == "shed_breaker"
+    # cooldown passed: probe admitted, and the bucket still holds its
+    # burst (negligible refill at rate=0.001) — breaker ran first.
+    assert adm.offer(_req(10), 11.0) == "admitted"
+    assert adm.offer(_req(11), 11.0) == "admitted"
+    assert adm.stats.shed_rate == 0
+
+
+def test_controller_full_queue_sheds_with_reason():
+    adm = AdmissionController(rate=100.0, burst=100.0, queue_cap=2,
+                              slo=8.0)
+    assert adm.offer(_req(0), 0.0) == "admitted"
+    assert adm.offer(_req(1), 0.0) == "admitted"
+    assert adm.offer(_req(2), 0.0) == "shed_queue"
+    assert adm.next_request().rid == 0       # FIFO out
+    assert adm.offer(_req(3), 0.0) == "admitted"

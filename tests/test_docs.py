@@ -164,5 +164,31 @@ def test_train_help_mentions_auto_and_engine():
     for needle in ("calibrat", "cache"):
         assert needle in text, f"--dp-degrees help must mention {needle}"
 
+def test_serve_flags_declared_and_documented():
+    """The serving-tier knobs are argparse-declared (so the flag lint
+    accepts the docs' mentions) and the docs book covers the tier: the
+    dataflow + consistency-oracle section in ARCHITECTURE, the quickstart
+    in README, and the bench → figure row in EXPERIMENTS."""
+    declared = _declared_flags()
+    for flag in ("--slots", "--rate", "--burst", "--queue-cap",
+                 "--slo-steps", "--breach-window", "--cooldown-steps",
+                 "--sparse-dispatch", "--head-size"):
+        assert flag in declared, f"{flag} not argparse-declared"
+    for doc, needles in (
+            ("ARCHITECTURE.md", ("Serving tier", "--sparse-dispatch",
+                                 "audit_serve_decode", "shape_bucket",
+                                 "tests/test_serve_tier.py",
+                                 "tests/test_admission.py",
+                                 "repro.serve.scheduler",
+                                 "repro.serve.dispatch")),
+            ("README.md", ("repro.serve", "--sparse-dispatch",
+                           "tests/test_serve_tier.py")),
+            ("EXPERIMENTS.md", ("benchmarks/bench_serve.py",
+                                "BENCH_pr10.json", "plan-cache hit rate"))):
+        text = _read(doc)
+        for needle in needles:
+            assert needle in text, f"{doc} must mention {needle}"
+
+
 # The public-docstring ast lint moved onto the rule engine: RA401 in
 # repro.analysis.rules, enforced repo-wide by tests/test_analysis.py.
